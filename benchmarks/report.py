@@ -1,0 +1,53 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+artifacts in experiments/dryrun/ (run after a sweep)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .roofline import analyze, render_markdown, table
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = ["| arch | shape | compile | lower+compile s | HBM GB/dev | "
+            "collectives (AG/AR/RS/A2A/CP count) |",
+            "|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(f"experiments/dryrun/*__{mesh}.json")):
+        d = json.load(open(path))
+        if "skipped" in d:
+            rows.append(f"| {d['arch']} | {d['shape']} | SKIP (design) "
+                        f"| | | |")
+            continue
+        m = d.get("memory_analysis", {})
+        hbm = (m.get("temp_size_in_bytes", 0)
+               + m.get("argument_size_in_bytes", 0)) / 1e9
+        c = d.get("collectives", {}).get("counts", {})
+        cc = "/".join(str(c.get(k, 0)) for k in
+                      ("all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | ✓ "
+            f"| {d.get('t_lower_s', 0) + d.get('t_compile_s', 0):.1f} "
+            f"| {hbm:.1f} | {cc} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    out = ["# Generated dry-run/roofline report\n"]
+    for mesh in ("single", "multi"):
+        n = len(glob.glob(f"experiments/dryrun/*__{mesh}.json"))
+        out.append(f"\n## §Dry-run — {mesh} mesh ({n} cells)\n")
+        out.append(dryrun_table(mesh))
+    out.append("\n\n## §Roofline (single-pod)\n")
+    out.append(render_markdown(table()))
+    text = "\n".join(out)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/report.md", "w") as f:
+        f.write(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

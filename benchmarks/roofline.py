@@ -1,0 +1,130 @@
+"""Roofline analysis (§Roofline in EXPERIMENTS.md) from dry-run artifacts.
+
+Per (arch × shape) cell on the single-pod mesh, three terms in seconds:
+
+  compute    = MODEL_FLOPS / (chips × 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes_per_device × k / 819e9 B/s
+  collective = collective_bytes_per_device / 50e9 B/s (ICI)
+
+Sources & calibration: XLA's ``cost_analysis`` counts while-loop bodies
+ONCE; the dry-run's own HLO parser re-counts matmul FLOPs and collective
+bytes with known trip counts folded in.  The calibration factor
+``k = parsed_dot_flops / cost_flops`` (≥1) scales the byte counter by the
+same loop multiplicity.  MODEL_FLOPS is the analytic useful work:
+train = 6·N_active·tokens, prefill = 2·N_active·tokens, decode =
+2·N_active·batch (per emitted token), each plus the attention term.
+``MODEL_FLOPS/HLO_FLOPs`` exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK = 197e12          # bf16 FLOP/s per chip
+HBM = 819e9            # bytes/s per chip
+ICI = 50e9             # bytes/s per link
+
+ARCH_META_CACHE: Dict[str, Dict] = {}
+
+
+def model_flops(rec: Dict) -> float:
+    """Analytic useful FLOPs for one step of this cell (global)."""
+    n_act = rec["n_active_params"]
+    b, s = rec["global_batch"], rec["seq_len"]
+    kind = rec["kind"]
+    if kind == "train":
+        base = 6.0 * n_act * b * s
+    elif kind == "prefill":
+        base = 2.0 * n_act * b * s
+    else:                      # decode: one token per sequence
+        base = 2.0 * n_act * b
+    return base
+
+
+def analyze(path: str) -> Optional[Dict]:
+    rec = json.load(open(path))
+    if "skipped" in rec:
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "skipped": rec["skipped"]}
+    chips = rec["n_devices"]
+    mf = model_flops(rec)
+    ca = rec.get("cost_analysis", {})
+    cost_flops = float(ca.get("flops", 0.0)) or 1.0
+    parsed = float(rec.get("dot_flops_per_device", 0.0))
+    k = max(1.0, parsed / cost_flops)
+    hlo_flops_dev = max(parsed, cost_flops)
+    bytes_dev = float(ca.get("bytes accessed", 0.0)) * k
+    coll = rec.get("collectives", {})
+    coll_bytes = sum(float(coll.get(c, 0.0)) for c in
+                     ("all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute"))
+    t_compute = mf / (chips * PEAK)
+    t_memory = bytes_dev / HBM
+    t_collective = coll_bytes / ICI
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    # realistic variant: v5e has 4 ICI links and XLA overlaps collectives
+    # with compute; the conservative column assumes 1 link, no overlap
+    total4 = max(t_compute, t_memory, t_collective / 4.0)
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "chips": chips,
+        "model_flops": mf,
+        "hlo_flops_per_device": hlo_flops_dev,
+        "flops_ratio": mf / chips / max(hlo_flops_dev, 1.0),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "roofline_fraction": t_compute / total if total > 0 else 0.0,
+        "roofline_fraction_4link": t_compute / total4 if total4 > 0 else 0.0,
+        "hbm_gb_per_device": (rec["memory_analysis"].get(
+            "temp_size_in_bytes", 0) + rec["memory_analysis"].get(
+            "argument_size_in_bytes", 0)) / 1e9,
+        "calibration_k": k,
+    }
+    return out
+
+
+def table(dryrun_dir: str = "experiments/dryrun",
+          mesh: str = "single") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        r = analyze(path)
+        if r is not None:
+            rows.append(r)
+    return rows
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    out = ["| arch | shape | dominant | compute s | memory s | collective s "
+           "| frac (1-link) | frac (4-link) | useful/HLO flops | HBM GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP: "
+                       f"{r['skipped'][:40]}… | | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{r['dominant']}** "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['roofline_fraction']:.2f} "
+            f"| {r['roofline_fraction_4link']:.2f} "
+            f"| {r['flops_ratio']:.2f} | {r['hbm_gb_per_device']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = table()
+    print(render_markdown(rows))
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

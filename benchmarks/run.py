@@ -1,0 +1,62 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only X]
+
+Prints ``name,us_per_call,derived`` CSV rows (+ a §Roofline table when
+dry-run artifacts exist under experiments/dryrun/).
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import List
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of benchmarks (CI)")
+    ap.add_argument("--only", default=None,
+                    choices=(None, "synthetic", "costs", "cache",
+                             "costmodels", "optimizer", "bb", "roofline"))
+    args = ap.parse_args()
+
+    from . import paper_figures as pf
+
+    rows: List[str] = ["name,us_per_call,derived"]
+    sel = args.only
+
+    if sel in (None, "synthetic"):
+        pf.bench_synthetic(rows)
+    if sel in (None, "costs"):
+        benches = (("heat_equation", "black_scholes", "game_of_life",
+                    "shallow_water", "sor", "monte_carlo_pi")
+                   if args.quick else None)
+        pf.bench_costs(rows, benches=benches)
+    if sel in (None, "cache"):
+        pf.bench_cache(rows)
+    if sel in (None, "costmodels"):
+        pf.bench_costmodels(
+            rows, benches=("heat_equation", "game_of_life")
+            if args.quick else ("heat_equation", "game_of_life", "sor",
+                                "black_scholes"))
+    if sel in (None, "optimizer"):
+        pf.bench_optimizer(rows)
+    if sel in (None, "bb"):
+        pf.bench_bb_ablation(rows)
+
+    print("\n".join(rows))
+
+    if sel in (None, "roofline"):
+        import glob
+        if glob.glob("experiments/dryrun/*__single.json"):
+            from .roofline import render_markdown, table
+            print("\n# Roofline (single-pod, from dry-run artifacts)")
+            print(render_markdown(table()))
+        else:
+            print("\n# Roofline: no dry-run artifacts yet "
+                  "(run python -m repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Batched serving example: prefill a batch of prompts, decode new tokens.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch rwkv6-3b]
+
+Exercises ``serve_prefill`` + ``serve_decode`` (the functions the dry-run
+lowers for the decode_32k / long_500k cells) with greedy sampling on the
+reduced config.
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax                                            # noqa: E402
+import jax.numpy as jnp                               # noqa: E402
+import numpy as np                                    # noqa: E402
+
+from repro.configs import ARCHS, get_config           # noqa: E402
+from repro.models.transformer import (init_params, serve_decode,   # noqa
+                                      serve_prefill)
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, cfg.encoder_seq, cfg.d_model),
+            jnp.float32).astype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        extra["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (args.batch, cfg.n_patches, cfg.d_model),
+            jnp.float32).astype(cfg.compute_dtype)
+
+    max_seq = args.prompt_len + args.new_tokens + \
+        (cfg.n_patches if cfg.family == "vlm" else 0)
+    prefill = jax.jit(lambda p, t: serve_prefill(p, t, cfg, max_seq, **extra))
+    decode = jax.jit(lambda p, c, t: serve_decode(p, c, t, cfg))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompts)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for _ in range(args.new_tokens - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    toks = np.asarray(jnp.concatenate(out, axis=1))
+    dt = time.perf_counter() - t0
+    print(f"[serve] {args.arch}: batch={args.batch} prompt={args.prompt_len} "
+          f"generated {args.new_tokens} tokens in {dt:.2f}s")
+    print("[serve] first sequence:", toks[0].tolist())
+    assert toks.shape == (args.batch, args.new_tokens)
+    print("[serve] OK")

@@ -1,0 +1,42 @@
+"""Merge cache (paper §IV-F): cache partitions of array-operation lists so
+iterative programs pay the partition-algorithm cost once.
+
+The key is a canonical tape signature with base uids renumbered by first
+occurrence — two loop iterations that allocate fresh bases but perform the
+same operations hash identically (exactly Bohrium's behaviour)."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .executor import block_signature
+from .ir import Op
+
+
+def tape_signature(tape: Sequence[Op], algorithm: str, cost_model: str) -> Tuple:
+    return (algorithm, cost_model, block_signature(tape))
+
+
+class MergeCache:
+    def __init__(self, capacity: int = 512):
+        self.capacity = capacity
+        self._store: Dict[Tuple, List[List[int]]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Tuple) -> Optional[List[List[int]]]:
+        got = self._store.get(key)
+        if got is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return got
+
+    def put(self, key: Tuple, op_blocks: List[List[int]]) -> None:
+        if len(self._store) >= self.capacity:
+            self._store.pop(next(iter(self._store)))   # FIFO eviction
+        self._store[key] = [list(b) for b in op_blocks]
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = self.misses = 0

@@ -1,0 +1,312 @@
+"""WSP cost models (paper Def. 13 and §V-A Defs. 19–21, plus beyond-paper
+TPU-aware models realizing the paper's §VII future-work).
+
+Every model exposes
+
+* ``partition_cost(blocks)``  — cost of a whole partition (Def. 6 monotone),
+* ``merge_saving(b1, b2)``    — cost(P) - cost(P/(B1,B2)), the weight-edge
+  value (Prop. 1 generalized: computed as a difference of block costs so it
+  is exact for ANY model, not just Bohrium's closed form).
+
+All models are monotone: ``merge_saving >= 0`` always (hypothesis-tested).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .blocks import BlockInfo, view_key
+from .ir import Op, View
+
+# TPU v5e hardware constants (per chip) — see ROOFLINE in EXPERIMENTS.md.
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+KERNEL_LAUNCH_S = 2e-6    # per-dispatch overhead (XLA executable launch)
+
+
+class CostModel:
+    name: str = "abstract"
+    unit: str = "elements"
+
+    def prepare(self, ops: Sequence[Op]) -> None:   # optional precompute
+        pass
+
+    def block_cost(self, b: BlockInfo) -> float:
+        raise NotImplementedError
+
+    def partition_cost(self, blocks: Sequence[BlockInfo]) -> float:
+        return sum(self.block_cost(b) for b in blocks)
+
+    def merge_saving(self, b1: BlockInfo, b2: BlockInfo) -> float:
+        merged = b1.merged_with(b2)
+        return self.block_cost(b1) + self.block_cost(b2) - self.block_cost(merged)
+
+
+class BohriumCost(CostModel):
+    """Def. 13: sum over blocks of unique external accesses ``||ext[B]||``.
+
+    ``unit='elements'`` reproduces the paper's figures (Fig. 3 cost 94);
+    ``unit='bytes'`` is the same model scaled by dtype itemsize.
+    """
+
+    def __init__(self, unit: str = "elements"):
+        self.unit = unit
+        self.name = "bohrium"
+
+    def block_cost(self, b: BlockInfo) -> float:
+        return float(b.ext_size(self.unit))
+
+
+def closed_form_saving(b1: BlockInfo, b2: BlockInfo, unit: str = "elements") -> float:
+    """Prop. 1 closed form — ``||ext∩ext|| + ||new[B1]∩in[B2]|| +
+    ||out[B1]∩del[B2]||`` (b1 must precede b2).  Used only to *verify* the
+    generic difference computation in tests."""
+
+    def sz(v: View) -> int:
+        return v.size if unit == "elements" else v.nbytes
+
+    r1, w1 = b1.ext_views()
+    r2, w2 = b2.ext_views()
+    k1r = {view_key(v) for v in r1}
+    k1w = {view_key(v) for v in w1}
+    s = sum(sz(v) for v in r2 if view_key(v) in k1r)
+    s += sum(sz(v) for v in w2 if view_key(v) in k1w)
+    s += sum(sz(v) for v in b2.in_map.values() if v.base.uid in b1.new_bases)
+    s += sum(sz(v) for v in b1.out_map.values() if v.base.uid in b2.del_bases)
+    return float(s)
+
+
+class MaxContractCost(CostModel):
+    """Def. 19: arrays NOT contracted each cost 1."""
+
+    def __init__(self):
+        self.name = "max_contract"
+        self._total_new = 0
+
+    def prepare(self, ops: Sequence[Op]) -> None:
+        self._total_new = len({b.uid for op in ops for b in op.new_bases})
+
+    def block_cost(self, b: BlockInfo) -> float:
+        return -float(b.n_contractions())
+
+    def partition_cost(self, blocks: Sequence[BlockInfo]) -> float:
+        return self._total_new + sum(self.block_cost(b) for b in blocks)
+
+
+class MaxLocalityCost(CostModel):
+    """Def. 20: each unordered pair of identical array accesses in different
+    blocks costs 1 (fusing four identical accesses saves C(4,2)=6)."""
+
+    def __init__(self):
+        self.name = "max_locality"
+        self._pair: Dict[Tuple[int, int], float] = {}
+        self._total = 0.0
+
+    @staticmethod
+    def _ext_io(op: Op):
+        if op.is_system():
+            return frozenset(), frozenset()
+        new = {b.uid for b in op.new_bases}
+        dl = {b.uid for b in op.del_bases}
+        ext = {view_key(v) for v in op.in_views() if v.base.uid not in new}
+        ext |= {view_key(v) for v in op.out_views() if v.base.uid not in dl}
+        io = {view_key(v) for v in (*op.in_views(), *op.out_views())}
+        return frozenset(ext), frozenset(io)
+
+    def prepare(self, ops: Sequence[Op]) -> None:
+        exts, ios = {}, {}
+        for op in ops:
+            exts[op.uid], ios[op.uid] = self._ext_io(op)
+        self._pair = {}
+        self._total = 0.0
+        uids = [op.uid for op in ops]
+        for a in range(len(uids)):
+            for b in range(a + 1, len(uids)):
+                u, v = uids[a], uids[b]
+                s = 0.5 * (len(exts[u] & ios[v]) + len(exts[v] & ios[u]))
+                if s:
+                    self._pair[(u, v)] = self._pair[(v, u)] = s
+                    self._total += s
+
+    def _within(self, b: BlockInfo) -> float:
+        uids = [o.uid for o in b.ops]
+        s = 0.0
+        for i in range(len(uids)):
+            for j in range(i + 1, len(uids)):
+                s += self._pair.get((uids[i], uids[j]), 0.0)
+        return s
+
+    def block_cost(self, b: BlockInfo) -> float:
+        return -self._within(b)
+
+    def partition_cost(self, blocks: Sequence[BlockInfo]) -> float:
+        return self._total + sum(self.block_cost(b) for b in blocks)
+
+    def merge_saving(self, b1: BlockInfo, b2: BlockInfo) -> float:
+        s = 0.0
+        for o1 in b1.ops:
+            for o2 in b2.ops:
+                s += self._pair.get((o1.uid, o2.uid), 0.0)
+        return s
+
+
+class RobinsonCost(CostModel):
+    """Def. 21: ``|P| + N*MaxContract + N^2*MaxLocality`` (lexicographic)."""
+
+    def __init__(self):
+        self.name = "robinson"
+        self.mc = MaxContractCost()
+        self.ml = MaxLocalityCost()
+        self._n = 1
+
+    def prepare(self, ops: Sequence[Op]) -> None:
+        self.mc.prepare(ops)
+        self.ml.prepare(ops)
+        bases = {v.base.uid for op in ops
+                 for v in (*op.in_views(), *op.out_views())}
+        self._n = max(2, len(bases))
+
+    def partition_cost(self, blocks: Sequence[BlockInfo]) -> float:
+        n = self._n
+        return (len(blocks) + n * self.mc.partition_cost(blocks)
+                + n * n * self.ml.partition_cost(blocks))
+
+    def block_cost(self, b: BlockInfo) -> float:  # decomposable parts only
+        n = self._n
+        return 1 + n * self.mc.block_cost(b) + n * n * self.ml.block_cost(b)
+
+    def merge_saving(self, b1: BlockInfo, b2: BlockInfo) -> float:
+        n = self._n
+        mc_gain = (b1.merged_with(b2).n_contractions()
+                   - b1.n_contractions() - b2.n_contractions())
+        return 1 + n * mc_gain + n * n * self.ml.merge_saving(b1, b2)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper models (paper §VII future work, realized for TPU v5e).
+# ---------------------------------------------------------------------------
+
+class TPUCost(CostModel):
+    """Bohrium's Def. 13 with hardware units: HBM↔VMEM traffic time plus a
+    per-block dispatch overhead.  Merging blocks saves both deduplicated HBM
+    traffic (data locality / array contraction — bytes that stay in VMEM)
+    and one kernel launch.  Monotone: both terms only shrink under merges."""
+
+    def __init__(self, hbm_bw: float = HBM_BW, launch_s: float = KERNEL_LAUNCH_S):
+        self.name = "tpu"
+        self.unit = "bytes"
+        self.hbm_bw = hbm_bw
+        self.launch_s = launch_s
+
+    def block_cost(self, b: BlockInfo) -> float:
+        if all(o.is_system() for o in b.ops):
+            return 0.0   # DEL/SYNC-only blocks dispatch nothing
+        return b.ext_size("bytes") / self.hbm_bw + self.launch_s
+
+
+class TPUDistCost(CostModel):
+    """Communication-aware WSP (the paper's distributed future-work bullet).
+
+    Bases may be sharded along one dimension across ``n_shards`` devices
+    (``base.shard`` set by the lazy front-end).  An external view whose
+    element span is *misaligned* with the shard grid (e.g. the shifted reads
+    of a stencil) requires a halo exchange over ICI; contracted temporaries
+    never leave VMEM and need no halo.  Fusing stencil steps therefore
+    removes whole halo exchanges, not just HBM trips — this is what makes
+    the fusion engine collective-aware on a pod.
+
+    Monotone: per-view costs are constants; merging only deduplicates views
+    and contracts arrays, so block costs only shrink.
+    """
+
+    def __init__(self, hbm_bw: float = HBM_BW, ici_bw: float = ICI_BW,
+                 launch_s: float = KERNEL_LAUNCH_S):
+        self.name = "tpu_dist"
+        self.unit = "bytes"
+        self.hbm_bw = hbm_bw
+        self.ici_bw = ici_bw
+        self.launch_s = launch_s
+
+    @staticmethod
+    def halo_bytes(v: View) -> int:
+        shard = getattr(v.base, "shard", None)
+        if not shard:
+            return 0
+        n_shards, dim = shard
+        if n_shards <= 1 or dim >= len(v.shape):
+            return 0
+        # slab = bytes per unit length along the sharded dim
+        slab = v.nbytes // max(1, v.shape[dim])
+        # shift of this view against the shard grid along `dim`
+        stride = v.strides[dim] if v.strides[dim] != 0 else 1
+        shift = (v.offset // abs(stride)) % max(1, v.shape[dim] // n_shards or 1)
+        if shift == 0 and v.shape[dim] % n_shards == 0:
+            return 0
+        width = min(abs(shift) if shift else 1, 4)   # halo width in elements
+        return (n_shards - 1) * width * slab
+
+    def block_cost(self, b: BlockInfo) -> float:
+        if all(o.is_system() for o in b.ops):
+            return 0.0
+        reads, writes = b.ext_views()
+        hbm = sum(v.nbytes for v in (*reads, *writes))
+        ici = sum(self.halo_bytes(v) for v in (*reads, *writes))
+        return hbm / self.hbm_bw + ici / self.ici_bw + self.launch_s
+
+
+class TPUFMACost(TPUCost):
+    """Paper §VII realized: reward co-locating multiply→add producer/
+    consumer pairs (they fuse into one VPU multiply-accumulate — fewer
+    VREG round-trips).  Monotone: merging can only co-locate more pairs,
+    so block costs only shrink."""
+
+    FMA_BONUS_S = 1e-7      # modelled saving per fused mul->add pair
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.name = "tpu_fma"
+
+    def _fma_pairs(self, b: BlockInfo) -> int:
+        writers: Dict[Tuple, str] = {}
+        for op in b.ops:
+            if op.out is not None:
+                writers[view_key(op.out)] = op.opcode
+        pairs = 0
+        for op in b.ops:
+            if op.opcode != "add":
+                continue
+            for v in op.in_views():
+                if writers.get(view_key(v)) == "mul":
+                    pairs += 1
+                    break
+        return pairs
+
+    def block_cost(self, b: BlockInfo) -> float:
+        base = super().block_cost(b)
+        return base - self.FMA_BONUS_S * self._fma_pairs(b)
+
+    def partition_cost(self, blocks: Sequence[BlockInfo]) -> float:
+        # keep Def. 6(1) non-negativity: offset by the max possible bonus
+        total = sum(self.block_cost(b) for b in blocks)
+        n_ops = sum(len(b.ops) for b in blocks)
+        return total + self.FMA_BONUS_S * n_ops
+
+
+_MODELS = {
+    "bohrium": BohriumCost,
+    "max_contract": MaxContractCost,
+    "max_locality": MaxLocalityCost,
+    "robinson": RobinsonCost,
+    "tpu": TPUCost,
+    "tpu_dist": TPUDistCost,
+    "tpu_fma": TPUFMACost,
+}
+
+
+def make_cost_model(name: str, **kw) -> CostModel:
+    try:
+        return _MODELS[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown cost model {name!r}; have {sorted(_MODELS)}")

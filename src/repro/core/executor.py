@@ -1,0 +1,269 @@
+"""Per-block JIT execution — the Bohrium backend analogue (paper §III final
+phase: "the hardware specific backend JIT-compiles each block of array
+operations and executes them").
+
+Each partition block becomes ONE jitted JAX function: `ext` arrays cross the
+block boundary as function inputs/outputs (exactly the paper's cost), while
+contracted arrays (``new∩del``) are local temporaries that XLA keeps in
+registers — array contraction.  On TPU, same-domain elementwise blocks are
+additionally lowered through the Pallas ``fused_block`` kernel
+(`repro.kernels.fused_block`) so contraction happens in VMEM.
+
+Compiled block functions are cached on a canonical structural signature, so
+iterative workloads (the paper's merge-cache scenario, §IV-F) re-dispatch
+the same executables every iteration.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ir import ELEMENTWISE, REDUCTIONS, Op, View
+
+_UNARY = {
+    "copy": lambda x: x, "sqrt": jnp.sqrt, "exp": jnp.exp, "log": jnp.log,
+    "abs": jnp.abs, "neg": jnp.negative, "sin": jnp.sin, "cos": jnp.cos,
+    "erf": jax.scipy.special.erf, "sign": jnp.sign, "rsqrt": jax.lax.rsqrt,
+    "tanh": jnp.tanh, "square": jnp.square, "reciprocal": lambda x: 1.0 / x,
+    "floor": jnp.floor,
+}
+_BINARY = {
+    "add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
+    "div": jnp.divide, "pow": jnp.power, "maximum": jnp.maximum,
+    "minimum": jnp.minimum, "greater": jnp.greater, "less": jnp.less,
+    "mod": jnp.mod,
+}
+_REDUCE = {
+    "reduce_sum": jnp.sum, "reduce_max": jnp.max, "reduce_min": jnp.min,
+    "reduce_prod": jnp.prod,
+}
+
+
+def _view_index(v: View) -> Optional[np.ndarray]:
+    """Static flat element indices of a view into its base, or None when the
+    view is the whole contiguous base (fast path: pure reshape)."""
+    if v.offset == 0 and v.size == v.base.size and v.is_contiguous():
+        return None
+    idx = np.full((), v.offset, dtype=np.int64)
+    for s, st in zip(v.shape, v.strides):
+        idx = idx[..., None] + np.arange(s, dtype=np.int64) * st
+    return idx.reshape(-1).astype(np.int32)
+
+
+def _read(buf, v: View):
+    idx = _view_index(v)
+    if idx is None:
+        return buf.reshape(v.shape)
+    return buf[idx].reshape(v.shape)
+
+
+def _write(buf, v: View, val):
+    val = jnp.broadcast_to(jnp.asarray(val, buf.dtype), v.shape)
+    idx = _view_index(v)
+    if idx is None:
+        return val.reshape(-1)
+    return buf.at[idx].set(val.reshape(-1))
+
+
+def block_io(ops: Sequence[Op]) -> Tuple[List[int], List[int], List[int]]:
+    """(input base uids, output base uids, contracted base uids) of a block.
+
+    inputs  = bases observed before being fully defined inside the block,
+    outputs = bases written here that outlive the block,
+    contracted = new∩del — never materialized outside the block (the paper's
+    array contraction; these become XLA temporaries / Pallas VMEM scratch).
+    """
+    new, deleted, synced, read, written = set(), set(), set(), set(), set()
+    inputs: List[int] = []
+    order: List[int] = []
+    for op in ops:
+        for b in (*op.new_bases,):
+            new.add(b.uid)
+        for v in op.in_views():
+            u = v.base.uid
+            if u not in new and u not in written and u not in inputs:
+                inputs.append(u)
+            read.add(u)
+            if u not in order:
+                order.append(u)
+        for v in op.out_views():
+            u = v.base.uid
+            # partial write of a pre-existing base is a read-modify-write
+            if (u not in new and u not in written and u not in inputs
+                    and not (v.offset == 0 and v.size == v.base.size)):
+                inputs.append(u)
+            written.add(u)
+            if u not in order:
+                order.append(u)
+        for b in op.del_bases:
+            deleted.add(b.uid)
+        for b in op.sync_bases:
+            synced.add(b.uid)
+    dead = deleted - synced     # SYNC'd bases stay observable
+    contracted = [u for u in order if u in new and u in dead]
+    outputs = [u for u in order if u in written and u not in dead]
+    return inputs, outputs, contracted
+
+
+def _base_meta(ops: Sequence[Op]) -> Dict[int, Tuple[int, np.dtype]]:
+    meta: Dict[int, Tuple[int, np.dtype]] = {}
+    for op in ops:
+        for v in (*op.in_views(), *op.out_views()):
+            meta[v.base.uid] = (v.base.size, v.base.dtype)
+    return meta
+
+
+def make_block_fn(ops: Sequence[Op], seed: int = 0):
+    """Build the fused function for one block.
+
+    Returns ``(fn, input_uids, output_uids)`` where ``fn(*input_bufs) ->
+    output_bufs`` is pure and jittable.  All view indices are static
+    constants, so XLA sees one straight-line fused program per block — the
+    fusion boundary is exactly what WSP chose.
+    """
+    work = [op for op in ops if not op.is_system()]
+    inputs, outputs, contracted = block_io(ops)   # DEL/SYNC drive contraction
+    meta = _base_meta(work)
+
+    def fn(*bufs_and_salt):
+        *bufs, salts = bufs_and_salt
+        env: Dict[int, jnp.ndarray] = {u: b for u, b in zip(inputs, bufs)}
+        n_rand = 0
+        for u in meta:
+            if u not in env:
+                size, dtype = meta[u]
+                env[u] = jnp.zeros((size,), dtype=dtype)
+        for op in work:
+            ins = [(_read(env[v.base.uid], v) if isinstance(v, View) else v)
+                   for v in op.inputs]
+            oc = op.opcode
+            if oc in _UNARY:
+                val = _UNARY[oc](*ins)
+            elif oc in _BINARY:
+                val = _BINARY[oc](*ins)
+            elif oc == "where":
+                val = jnp.where(*ins)
+            elif oc in _REDUCE:
+                val = _REDUCE[oc](ins[0], axis=op.axis)
+            elif oc == "matmul":
+                val = jnp.matmul(ins[0], ins[1])
+            elif oc == "random":
+                # per-op salts are call-time arguments: structurally-
+                # identical blocks (shared executable) draw fresh values,
+                # and the drawn values are PARTITION-INVARIANT (the salt is
+                # the op's own uid, not a block property)
+                key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                         salts[n_rand])
+                n_rand += 1
+                val = jax.random.uniform(key, op.out.shape,
+                                         dtype=op.out.dtype)
+            elif oc == "range":
+                val = jnp.arange(op.out.size, dtype=op.out.dtype).reshape(op.out.shape)
+            elif oc == "gather":
+                val = jnp.take(ins[0], ins[1].astype(jnp.int32), axis=op.axis or 0)
+            else:
+                raise NotImplementedError(f"opcode {oc!r}")
+            ov = op.out
+            if ov is not None:
+                env[ov.base.uid] = _write(env[ov.base.uid], ov, val)
+        return tuple(env[u] for u in outputs)
+
+    return fn, inputs, outputs
+
+
+def block_signature(ops: Sequence[Op]) -> Tuple:
+    """Canonical structural key for the compiled-executable cache: base uids
+    renumbered by first occurrence so loop iterations share executables."""
+    remap: Dict[int, int] = {}
+
+    def r(uid: int) -> int:
+        return remap.setdefault(uid, len(remap))
+
+    sig = []
+    for op in ops:
+        ins = tuple(
+            (r(v.base.uid), v.base.size, str(v.dtype), v.offset, v.shape,
+             v.strides) if isinstance(v, View)
+            else ("lit", float(v)) for v in op.inputs)
+        out = (r(op.out.base.uid), op.out.base.size, str(op.out.dtype),
+               op.out.offset, op.out.shape, op.out.strides) if op.out is not None else None
+        sig.append((op.opcode, out, ins, op.axis,
+                    tuple(sorted(r(b.uid) for b in op.new_bases)),
+                    tuple(sorted(r(b.uid) for b in op.del_bases)),
+                    tuple(sorted((r(b.uid), b.size, str(b.dtype))
+                                 for b in (*op.del_bases, *op.sync_bases)))))
+    return tuple(sig)
+
+
+class BlockExecutor:
+    """Executes a partitioned tape against a buffer store, caching compiled
+    block executables across flushes (the runtime-JIT part of §IV-F)."""
+
+    def __init__(self, seed: int = 0, jit: bool = True,
+                 backend: str = "xla"):
+        """backend='pallas' lowers fusible elementwise blocks through the
+        Pallas fused_block kernel generator (interpret mode on CPU; compiled
+        on TPU) with automatic XLA fallback for unsupported blocks."""
+        self.seed = seed
+        self.jit = jit
+        self.backend = backend
+        self._cache: Dict[Tuple, Tuple] = {}
+        self.sync_store: Dict[int, jnp.ndarray] = {}
+        self.stats = {"blocks_run": 0, "exec_cache_hits": 0,
+                      "exec_cache_misses": 0, "pallas_blocks": 0}
+
+    def run(self, tape: Sequence[Op], op_blocks: Sequence[Sequence[int]],
+            buffers: Dict[int, jnp.ndarray]) -> None:
+        for block in op_blocks:
+            ops = [tape[i] for i in block]
+            work = [op for op in ops if not op.is_system()]
+            if work:
+                sig = block_signature(ops)
+                fn = self._cache.get(sig)
+                # ins/outs are uid lists of THIS block; the canonical
+                # signature guarantees positional correspondence with the
+                # cached executable, but the uids themselves differ.
+                ins, outs, _ = block_io(ops)
+                if fn is None:
+                    used_pallas = False
+                    if self.backend == "pallas":
+                        from ..kernels.fused_block.ops import fused_block_fn
+                        pfn, fins, fouts, used_pallas = fused_block_fn(ops)
+                        if used_pallas:
+                            # kernel path takes no RNG salts (elementwise
+                            # blocks never contain random ops)
+                            fn = lambda *a: pfn(*a[:-1])      # noqa: E731
+                            self.stats["pallas_blocks"] += 1
+                    if not used_pallas:
+                        fn, fins, fouts = make_block_fn(ops, seed=self.seed)
+                        if self.jit:
+                            fn = jax.jit(fn)
+                    assert fins == ins and fouts == outs
+                    self._cache[sig] = fn
+                    self.stats["exec_cache_misses"] += 1
+                else:
+                    self.stats["exec_cache_hits"] += 1
+                in_bufs = []
+                for u in ins:
+                    if u not in buffers:
+                        raise RuntimeError(f"base {u} read before definition")
+                    in_bufs.append(buffers[u])
+                salts = jnp.asarray(
+                    [getattr(op, "salt", op.uid) % (2**31 - 1)
+                     for op in work if op.opcode == "random"],
+                    dtype=jnp.int32)
+                out_bufs = fn(*in_bufs, salts)
+                for u, b in zip(outs, out_bufs):
+                    buffers[u] = b
+                self.stats["blocks_run"] += 1
+            for op in ops:   # SYNC snapshots before DEL frees (Bohrium order)
+                for b in op.sync_bases:
+                    if b.uid in buffers:
+                        self.sync_store[b.uid] = buffers[b.uid]
+                for b in op.del_bases:
+                    buffers.pop(b.uid, None)

@@ -1,0 +1,129 @@
+"""WSP graph construction from an array-bytecode tape (paper §III).
+
+Implements Def. 11 (data-parallelism), Def. 12 (pairwise fusibility) and the
+O(V²) construction of the WSP instance ``G = (V, E_d, E_f)`` from a list of
+array operations (§III-3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Set, Tuple
+
+from .ir import ELEMENTWISE, REDUCTIONS, Op, View
+
+# opcodes that are data-parallel over a regular iteration domain and may share
+# a fused kernel with other such ops (reductions fuse on their sweep domain).
+FUSIBLE_OPCODES = set(ELEMENTWISE) | REDUCTIONS | {"random", "range"}
+# opcodes that never share a block with a non-system op (irregular access).
+OPAQUE_OPCODES = {"matmul", "gather"}
+
+
+def data_parallel(op: Op) -> bool:
+    """Def. 11: overlapping input/output views must be identical."""
+    outs = op.out_views()
+    for i in op.in_views():
+        for o in outs:
+            if i.overlaps(o) and not i.identical(o):
+                return False
+    for a in range(len(outs)):
+        for b in range(a + 1, len(outs)):
+            if outs[a].overlaps(outs[b]) and not outs[a].identical(outs[b]):
+                return False
+    return True
+
+
+def _views_compatible(xs: Tuple[View, ...], ys: Tuple[View, ...]) -> bool:
+    for x in xs:
+        for y in ys:
+            if x.overlaps(y) and not x.identical(y):
+                return False
+    return True
+
+
+def fusible(f: Op, g: Op) -> bool:
+    """Def. 12 (+ equal iteration domain, §III-A.1).
+
+    ``f`` precedes ``g`` in program order.  System ops (DEL/SYNC) have no
+    views and fuse with everything.
+    """
+    if f.is_system() or g.is_system():
+        return True
+    if f.opcode in OPAQUE_OPCODES or g.opcode in OPAQUE_OPCODES:
+        return False
+    # Bohrium: equal length and dimensionality of the iteration domain.
+    if f.domain != g.domain:
+        return False
+    if not _views_compatible(g.in_views(), f.out_views()):    # Def 12(1)
+        return False
+    if not _views_compatible(g.out_views(), f.out_views()):   # Def 12(2)
+        return False
+    if not _views_compatible(g.out_views(), f.in_views()):    # Def 12(3)
+        return False
+    return True
+
+
+def _dep_reads(op: Op) -> Tuple[View, ...]:
+    """Views whose contents this op observes (for dependency edges).  DEL and
+    SYNC have no cost views but do order against accesses of their bases."""
+    if op.is_system():
+        return tuple(View.contiguous(b, (b.size,)) for b in
+                     (*op.del_bases, *op.sync_bases))
+    return op.in_views()
+
+
+def _dep_writes(op: Op) -> Tuple[View, ...]:
+    if op.opcode == "del":
+        # destroying a base conflicts with ANY later access
+        return tuple(View.contiguous(b, (b.size,)) for b in op.del_bases)
+    return op.out_views()
+
+
+def depends(f: Op, g: Op) -> bool:
+    """True iff ``g`` must execute after ``f`` (f precedes g in program
+    order): RAW / WAR / WAW conflicts on overlapping views."""
+    fr, fw = _dep_reads(f), _dep_writes(f)
+    gr, gw = _dep_reads(g), _dep_writes(g)
+    for o in fw:                    # RAW + WAW
+        for v in (*gr, *gw):
+            if o.overlaps(v):
+                return True
+    for i in fr:                    # WAR
+        for o in gw:
+            if i.overlaps(o):
+                return True
+    return False
+
+
+@dataclass
+class WSPGraph:
+    """The WSP instance: vertices are tape indices into ``ops``."""
+
+    ops: List[Op]
+    dep_out: Dict[int, Set[int]] = field(default_factory=dict)   # E_d (i -> j)
+    dep_in: Dict[int, Set[int]] = field(default_factory=dict)
+    fuse_forbidden: Dict[int, Set[int]] = field(default_factory=dict)  # E_f
+
+    def n(self) -> int:
+        return len(self.ops)
+
+
+def build_graph(ops: List[Op]) -> WSPGraph:
+    """O(V²) pairwise construction (§III-3), with transitive reduction of
+    E_d left implicit (partition legality only needs reachability)."""
+    n = len(ops)
+    g = WSPGraph(ops=ops,
+                 dep_out={i: set() for i in range(n)},
+                 dep_in={i: set() for i in range(n)},
+                 fuse_forbidden={i: set() for i in range(n)})
+    for j in range(n):
+        for i in range(j):
+            if depends(ops[i], ops[j]):
+                g.dep_out[i].add(j)
+                g.dep_in[j].add(i)
+            if not fusible(ops[i], ops[j]):
+                g.fuse_forbidden[i].add(j)
+                g.fuse_forbidden[j].add(i)
+        if not data_parallel(ops[j]):
+            raise ValueError(f"operation is not data-parallel (Def 11): {ops[j]}")
+    return g

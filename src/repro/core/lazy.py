@@ -1,0 +1,484 @@
+"""Lazy array front-end — the Bohrium bytecode recorder (paper Fig. 2).
+
+``repro.core.lazy`` is a drop-in-style NumPy subset: operations on
+``LazyArray`` record array bytecode onto a tape instead of executing.  On a
+side effect (printing / ``.numpy()`` / ``sync``) the tape is partitioned by a
+WSP algorithm under a cost model (both selectable), each block is JIT-fused,
+and results materialize.  ``DEL`` is recorded when the last Python reference
+to a base drops (CPython refcounting, as in Bohrium's Python front-end) or
+via explicit ``.delete()``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The paper's benchmarks use 64-bit floats; enable x64 so the lazy runtime
+# matches NumPy semantics exactly (model code specifies dtypes explicitly
+# and is unaffected).
+jax.config.update("jax_enable_x64", True)
+
+from .algorithms import PartitionResult, partition
+from .cache import MergeCache, tape_signature
+from .executor import BlockExecutor
+from .ir import BaseArray, Op, View
+
+Scalar = Union[int, float, bool]
+
+
+class Runtime:
+    """Owns the tape, the buffer store, the merge cache and the policy."""
+
+    def __init__(self, algorithm: str = "greedy", cost_model: str = "bohrium",
+                 use_cache: bool = True, node_budget: int = 100_000,
+                 seed: int = 0, jit: bool = True, backend: str = "xla"):
+        self.algorithm = algorithm
+        self.cost_model = cost_model
+        self.use_cache = use_cache
+        self.node_budget = node_budget
+        self.tape: List[Op] = []
+        self.buffers: Dict[int, jnp.ndarray] = {}
+        self.cache = MergeCache()
+        self.executor = BlockExecutor(seed=seed, jit=jit, backend=backend)
+        self._known: set = set()
+        self._refcount: Dict[int, int] = {}
+        self._bases: Dict[int, BaseArray] = {}
+        self._flushing = False
+        self._ordinal = 0            # runtime-local op counter (RNG salts)
+        self.flushes = 0
+        self.last_partition: Optional[PartitionResult] = None
+        self.history: List[Dict] = []
+
+    # -- recording -----------------------------------------------------
+    def record(self, op: Op) -> None:
+        new = []
+        for v in (*op.in_views(), *op.out_views()):
+            u = v.base.uid
+            if u not in self._known and u not in self.buffers:
+                new.append(v.base)
+                self._known.add(u)
+        if new:
+            op.new_bases = frozenset(set(op.new_bases) | set(new))
+        op.salt = self._ordinal      # deterministic per-program RNG salt
+        self._ordinal += 1
+        self.tape.append(op)
+
+    def incref(self, base: BaseArray) -> None:
+        self._refcount[base.uid] = self._refcount.get(base.uid, 0) + 1
+        self._bases[base.uid] = base
+
+    def decref(self, base: BaseArray) -> None:
+        c = self._refcount.get(base.uid)
+        if c is None:
+            return
+        if c <= 1:
+            del self._refcount[base.uid]
+            self._bases.pop(base.uid, None)
+            if base.uid in self._known or base.uid in self.buffers:
+                self.record(Op("del", None, del_bases=frozenset({base})))
+        else:
+            self._refcount[base.uid] = c - 1
+
+    # -- flushing ------------------------------------------------------
+    def flush(self) -> None:
+        if not self.tape or self._flushing:
+            return
+        self._flushing = True
+        try:
+            tape, self.tape = self.tape, []
+            key = tape_signature(tape, self.algorithm, self.cost_model)
+            blocks = self.cache.get(key) if self.use_cache else None
+            if blocks is None:
+                res = partition(tape, algorithm=self.algorithm,
+                                cost_model=self.cost_model,
+                                node_budget=self.node_budget)
+                blocks = res.op_blocks()
+                self.last_partition = res
+                if self.use_cache:
+                    self.cache.put(key, blocks)
+                self.history.append({"cost": res.cost, "n_ops": len(tape),
+                                     "n_blocks": res.n_blocks,
+                                     "cached": False, **res.stats})
+            else:
+                self.history.append({"n_ops": len(tape), "cached": True})
+            self.executor.run(tape, blocks, self.buffers)
+            self._known = set()
+            self.flushes += 1
+        finally:
+            self._flushing = False
+
+    def materialize(self, view: View) -> np.ndarray:
+        self.record(Op("sync", None, sync_bases=frozenset({view.base})))
+        self.flush()
+        buf = self.buffers.get(view.base.uid)
+        if buf is None:
+            buf = self.executor.sync_store[view.base.uid]
+        from .executor import _read
+        return np.asarray(_read(buf, view))
+
+    def adopt(self, arr: np.ndarray) -> "LazyArray":
+        """Bring host data into the runtime (no bytecode recorded)."""
+        arr = np.ascontiguousarray(arr)
+        base = BaseArray(arr.size, arr.dtype)
+        self.buffers[base.uid] = jnp.asarray(arr.reshape(-1))
+        return LazyArray(self, View.contiguous(base, arr.shape))
+
+
+_rt = Runtime()
+
+
+def get_runtime() -> Runtime:
+    return _rt
+
+
+def set_policy(algorithm: Optional[str] = None, cost_model: Optional[str] = None,
+               use_cache: Optional[bool] = None, node_budget: Optional[int] = None):
+    if algorithm is not None:
+        _rt.algorithm = algorithm
+    if cost_model is not None:
+        _rt.cost_model = cost_model
+    if use_cache is not None:
+        _rt.use_cache = use_cache
+    if node_budget is not None:
+        _rt.node_budget = node_budget
+
+
+@contextlib.contextmanager
+def fresh_runtime(**kw):
+    """Context manager giving an isolated runtime (tests/benchmarks)."""
+    global _rt
+    old = _rt
+    _rt = Runtime(**kw)
+    try:
+        yield _rt
+    finally:
+        _rt = old
+
+
+# ---------------------------------------------------------------------------
+
+class LazyArray:
+    __array_priority__ = 100  # beat numpy in mixed expressions
+
+    def __init__(self, rt: Runtime, view: View):
+        self.rt = rt
+        self.view = view
+        rt.incref(view.base)
+        self._alive = True
+
+    def __del__(self):
+        if getattr(self, "_alive", False):
+            self._alive = False
+            try:
+                self.rt.decref(self.view.base)
+            except Exception:
+                pass
+
+    def delete(self) -> None:
+        """Explicit DEL (deterministic alternative to refcount timing)."""
+        if self._alive:
+            self._alive = False
+            self.rt.decref(self.view.base)
+
+    # -- geometry -------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.view.shape
+
+    @property
+    def ndim(self) -> int:
+        return len(self.view.shape)
+
+    @property
+    def size(self) -> int:
+        return self.view.size
+
+    @property
+    def dtype(self):
+        return self.view.dtype
+
+    @property
+    def T(self) -> "LazyArray":
+        v = self.view
+        return LazyArray(self.rt, View(v.base, v.offset, v.shape[::-1],
+                                       v.strides[::-1]))
+
+    def reshape(self, *shape) -> "LazyArray":
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        shape = tuple(int(s) for s in shape)
+        if -1 in shape:
+            rest = 1
+            for s in shape:
+                if s != -1:
+                    rest *= s
+            shape = tuple(self.size // rest if s == -1 else s for s in shape)
+        if not self.view.is_contiguous():
+            return self.copy().reshape(*shape)
+        return LazyArray(self.rt, View.contiguous(self.view.base, shape,
+                                                  self.view.offset))
+
+    def broadcast_to(self, shape: Tuple[int, ...]) -> "LazyArray":
+        v = self.view
+        shape = tuple(int(s) for s in shape)
+        pad = len(shape) - len(v.shape)
+        src_shape = (1,) * pad + v.shape
+        src_strides = (0,) * pad + v.strides
+        strides = []
+        for t, s, st in zip(shape, src_shape, src_strides):
+            if s == t:
+                strides.append(st)
+            elif s == 1:
+                strides.append(0)
+            else:
+                raise ValueError(f"cannot broadcast {v.shape} to {shape}")
+        return LazyArray(self.rt, View(v.base, v.offset, shape, tuple(strides)))
+
+    def __getitem__(self, key) -> "LazyArray":
+        v = self.view
+        if not isinstance(key, tuple):
+            key = (key,)
+        off, shape, strides = v.offset, [], []
+        dim = 0
+        for k in key:
+            if isinstance(k, int):
+                if k < 0:
+                    k += v.shape[dim]
+                off += k * v.strides[dim]
+                dim += 1
+            elif isinstance(k, slice):
+                start, stop, step = k.indices(v.shape[dim])
+                n = max(0, (stop - start + (step - (1 if step > 0 else -1))) // step)
+                off += start * v.strides[dim]
+                shape.append(n)
+                strides.append(v.strides[dim] * step)
+                dim += 1
+            else:
+                raise TypeError(f"unsupported index {k!r}")
+        shape += list(v.shape[dim:])
+        strides += list(v.strides[dim:])
+        return LazyArray(self.rt, View(v.base, off, tuple(shape), tuple(strides)))
+
+    def __setitem__(self, key, value) -> None:
+        dst = self[key] if not (isinstance(key, slice) and key == slice(None)) else self
+        _record_elementwise(self.rt, "copy", dst.view,
+                            (dst._coerce(value, dst.shape),))
+
+    # -- arithmetic -------------------------------------------------------
+    def _coerce(self, other, shape):
+        if isinstance(other, LazyArray):
+            if other.shape != shape:
+                return other.broadcast_to(shape).view
+            return other.view
+        if isinstance(other, np.ndarray):
+            la = self.rt.adopt(other)
+            return la.broadcast_to(shape).view if la.shape != shape else la.view
+        return float(other)
+
+    def _binop(self, other, opcode, reverse=False) -> "LazyArray":
+        shape = self.shape
+        if isinstance(other, (LazyArray, np.ndarray)):
+            oshape = other.shape
+            shape = tuple(np.broadcast_shapes(self.shape, oshape))
+        me = self.view if self.shape == shape else self.broadcast_to(shape).view
+        ov = self._coerce(other, shape)
+        dtype = self.dtype
+        out = _alloc(self.rt, shape, dtype)
+        args = (ov, me) if reverse else (me, ov)
+        _record_elementwise(self.rt, opcode, out.view, args)
+        return out
+
+    def __add__(self, o): return self._binop(o, "add")
+    def __radd__(self, o): return self._binop(o, "add", True)
+    def __sub__(self, o): return self._binop(o, "sub")
+    def __rsub__(self, o): return self._binop(o, "sub", True)
+    def __mul__(self, o): return self._binop(o, "mul")
+    def __rmul__(self, o): return self._binop(o, "mul", True)
+    def __truediv__(self, o): return self._binop(o, "div")
+    def __rtruediv__(self, o): return self._binop(o, "div", True)
+    def __pow__(self, o): return self._binop(o, "pow")
+    def __mod__(self, o): return self._binop(o, "mod")
+    def __gt__(self, o): return self._binop(o, "greater")
+    def __lt__(self, o): return self._binop(o, "less")
+    def __neg__(self):
+        out = _alloc(self.rt, self.shape, self.dtype)
+        _record_elementwise(self.rt, "neg", out.view, (self.view,))
+        return out
+
+    def _iop(self, other, opcode) -> "LazyArray":
+        ov = self._coerce(other, self.shape)
+        _record_elementwise(self.rt, opcode, self.view, (self.view, ov))
+        return self
+
+    def __iadd__(self, o): return self._iop(o, "add")
+    def __isub__(self, o): return self._iop(o, "sub")
+    def __imul__(self, o): return self._iop(o, "mul")
+    def __itruediv__(self, o): return self._iop(o, "div")
+
+    # -- reductions ---------------------------------------------------------
+    def _reduce(self, opcode: str, axis: Optional[int]) -> "LazyArray":
+        if axis is None:
+            r = self
+            while r.ndim > 0:
+                r = r._reduce(opcode, 0)
+            return r
+        if axis < 0:
+            axis += self.ndim
+        shape = self.shape[:axis] + self.shape[axis + 1:]
+        out = _alloc(self.rt, shape, self.dtype)
+        op = Op(opcode, out.view, (self.view,), axis=axis)
+        self.rt.record(op)
+        return out
+
+    def sum(self, axis: Optional[int] = None): return self._reduce("reduce_sum", axis)
+    def max(self, axis: Optional[int] = None): return self._reduce("reduce_max", axis)
+    def min(self, axis: Optional[int] = None): return self._reduce("reduce_min", axis)
+    def prod(self, axis: Optional[int] = None): return self._reduce("reduce_prod", axis)
+
+    # -- materialization ------------------------------------------------------
+    def copy(self) -> "LazyArray":
+        out = _alloc(self.rt, self.shape, self.dtype)
+        _record_elementwise(self.rt, "copy", out.view, (self.view,))
+        return out
+
+    def numpy(self) -> np.ndarray:
+        return self.rt.materialize(self.view)
+
+    def __array__(self, dtype=None, copy=None):
+        a = self.numpy()
+        return a.astype(dtype) if dtype is not None else a
+
+    def item(self) -> float:
+        return float(self.numpy())
+
+    def __float__(self) -> float:
+        return self.item()
+
+    def __repr__(self) -> str:
+        return f"LazyArray(shape={self.shape}, dtype={self.dtype})"
+
+
+# -- helpers ----------------------------------------------------------------
+
+def _alloc(rt: Runtime, shape: Tuple[int, ...], dtype) -> LazyArray:
+    size = 1
+    for s in shape:
+        size *= s
+    base = BaseArray(max(size, 1), np.dtype(dtype))
+    return LazyArray(rt, View.contiguous(base, tuple(shape)))
+
+
+def _record_elementwise(rt: Runtime, opcode: str, out: View, inputs) -> None:
+    rt.record(Op(opcode, out, tuple(inputs)))
+
+
+# -- module-level API (NumPy-ish) ---------------------------------------------
+
+def zeros(shape, dtype=np.float64) -> LazyArray:
+    if isinstance(shape, int):
+        shape = (shape,)
+    out = _alloc(_rt, tuple(shape), dtype)
+    _record_elementwise(_rt, "copy", out.view, (0.0,))
+    return out
+
+
+def ones(shape, dtype=np.float64) -> LazyArray:
+    return full(shape, 1.0, dtype)
+
+
+def full(shape, value: Scalar, dtype=np.float64) -> LazyArray:
+    if isinstance(shape, int):
+        shape = (shape,)
+    out = _alloc(_rt, tuple(shape), dtype)
+    _record_elementwise(_rt, "copy", out.view, (float(value),))
+    return out
+
+
+def empty(shape, dtype=np.float64) -> LazyArray:
+    return zeros(shape, dtype)
+
+
+def arange(n: int, dtype=np.float64) -> LazyArray:
+    out = _alloc(_rt, (int(n),), dtype)
+    _rt.record(Op("range", out.view))
+    return out
+
+
+def random(shape, dtype=np.float64) -> LazyArray:
+    if isinstance(shape, int):
+        shape = (shape,)
+    out = _alloc(_rt, tuple(shape), dtype)
+    _rt.record(Op("random", out.view))
+    return out
+
+
+def asarray(a) -> LazyArray:
+    if isinstance(a, LazyArray):
+        return a
+    return _rt.adopt(np.asarray(a))
+
+
+def _unary(name):
+    def f(x: LazyArray) -> LazyArray:
+        out = _alloc(x.rt, x.shape, x.dtype)
+        _record_elementwise(x.rt, name, out.view, (x.view,))
+        return out
+    f.__name__ = name
+    return f
+
+
+sqrt = _unary("sqrt")
+exp = _unary("exp")
+log = _unary("log")
+absolute = _unary("abs")
+sin = _unary("sin")
+cos = _unary("cos")
+erf = _unary("erf")
+tanh = _unary("tanh")
+square = _unary("square")
+rsqrt = _unary("rsqrt")
+floor = _unary("floor")
+sign = _unary("sign")
+
+
+def maximum(a: LazyArray, b, out: Optional[LazyArray] = None) -> LazyArray:
+    dst = out if out is not None else _alloc(a.rt, a.shape, a.dtype)
+    _record_elementwise(a.rt, "maximum", dst.view, (a.view, a._coerce(b, a.shape)))
+    return dst
+
+
+def minimum(a: LazyArray, b, out: Optional[LazyArray] = None) -> LazyArray:
+    dst = out if out is not None else _alloc(a.rt, a.shape, a.dtype)
+    _record_elementwise(a.rt, "minimum", dst.view, (a.view, a._coerce(b, a.shape)))
+    return dst
+
+
+def where(cond: LazyArray, a, b) -> LazyArray:
+    out = _alloc(cond.rt, cond.shape, np.float64)
+    _record_elementwise(cond.rt, "where", out.view,
+                        (cond.view, cond._coerce(a, cond.shape),
+                         cond._coerce(b, cond.shape)))
+    return out
+
+
+def matmul(a: LazyArray, b: LazyArray) -> LazyArray:
+    assert a.ndim == 2 and b.ndim == 2
+    out = _alloc(a.rt, (a.shape[0], b.shape[1]), a.dtype)
+    a.rt.record(Op("matmul", out.view, (a.view, b.view)))
+    return out
+
+
+def sync(*arrays: LazyArray) -> None:
+    for a in arrays:
+        a.rt.record(Op("sync", None, sync_bases=frozenset({a.view.base})))
+    if arrays:
+        arrays[0].rt.flush()
+
+
+def flush() -> None:
+    _rt.flush()

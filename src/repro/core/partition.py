@@ -1,0 +1,217 @@
+"""Partition graphs and the WSP state (paper Defs. 14–17, Lemma 1).
+
+``PartitionState`` is the mutable structure all partition algorithms operate
+on: the partition graph (blocks + contracted dependency/fuse edges) plus the
+weight graph ``E_w`` whose edge weights are ``merge_saving`` values.  The
+weight graph is kept exact by recomputing all edges incident to a merged
+vertex (Def. 17's MERGE), which is O(V) savings computations per merge.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
+
+from .blocks import BlockInfo
+from .cost import CostModel
+from .fusion import WSPGraph
+
+
+def _ekey(u: int, v: int) -> Tuple[int, int]:
+    return (u, v) if u < v else (v, u)
+
+
+class PartitionState:
+    """A legal partition of a WSP graph + its weight graph (Def. 15)."""
+
+    def __init__(self, graph: WSPGraph, cost_model: CostModel,
+                 _skip_init: bool = False):
+        self.graph = graph
+        self.cost_model = cost_model
+        if _skip_init:
+            return
+        cost_model.prepare(graph.ops)
+        n = graph.n()
+        self.blocks: Dict[int, BlockInfo] = {
+            i: BlockInfo.from_op(graph.ops[i]) for i in range(n)}
+        self.members: Dict[int, Set[int]] = {i: {i} for i in range(n)}
+        self.block_of: Dict[int, int] = {i: i for i in range(n)}
+        self.dep_out: Dict[int, Set[int]] = {i: set(graph.dep_out[i]) for i in range(n)}
+        self.dep_in: Dict[int, Set[int]] = {i: set(graph.dep_in[i]) for i in range(n)}
+        self.fuse: Dict[int, Set[int]] = {i: set(graph.fuse_forbidden[i]) for i in range(n)}
+        # E_w (Def. 15): formally the complete weighted graph.  We keep the
+        # edges that can matter: positive-saving pairs, plus dependency-
+        # adjacent zero-saving pairs (cost-neutral merges that legality
+        # chains — e.g. a create→…→DEL contraction chain — must pass
+        # through; dropping them would make such chains unreachable).
+        self.weights: Dict[Tuple[int, int], float] = {}
+        for u in range(n):
+            for v in range(u + 1, n):
+                if v in self.fuse[u]:
+                    continue
+                s = cost_model.merge_saving(self.blocks[u], self.blocks[v])
+                if s > 0 or v in self.dep_out[u] or u in self.dep_out[v]:
+                    self.weights[(u, v)] = s
+
+    # ------------------------------------------------------------------
+    def copy(self) -> "PartitionState":
+        st = PartitionState(self.graph, self.cost_model, _skip_init=True)
+        st.blocks = dict(self.blocks)      # BlockInfo treated immutable
+        st.members = {k: set(v) for k, v in self.members.items()}
+        st.block_of = dict(self.block_of)
+        st.dep_out = {k: set(v) for k, v in self.dep_out.items()}
+        st.dep_in = {k: set(v) for k, v in self.dep_in.items()}
+        st.fuse = {k: set(v) for k, v in self.fuse.items()}
+        st.weights = dict(self.weights)
+        return st
+
+    # -- Lemma 1 ---------------------------------------------------------
+    def _path_avoiding_direct(self, src: int, dst: int) -> bool:
+        """True if a dep path src→…→dst of length >= 2 exists."""
+        stack = [n for n in self.dep_out[src] if n != dst]
+        seen = set(stack)
+        while stack:
+            x = stack.pop()
+            if x == dst:
+                return True
+            for n in self.dep_out[x]:
+                if n not in seen:
+                    seen.add(n)
+                    stack.append(n)
+        return False
+
+    def legal_merge(self, u: int, v: int) -> bool:
+        if u == v or v in self.fuse[u]:
+            return False
+        return not (self._path_avoiding_direct(u, v)
+                    or self._path_avoiding_direct(v, u))
+
+    # -- Def. 17 MERGE ----------------------------------------------------
+    def merge(self, u: int, v: int) -> int:
+        """Contract v into u (in place).  Returns surviving block id."""
+        assert u != v
+        self.blocks[u] = self.blocks[u].merged_with(self.blocks[v])
+        self.members[u] |= self.members.pop(v)
+        for i in self.members[u]:
+            self.block_of[i] = u
+        for n in self.dep_out.pop(v):
+            self.dep_in[n].discard(v)
+            if n != u:
+                self.dep_out[u].add(n)
+                self.dep_in[n].add(u)
+        for n in self.dep_in.pop(v):
+            self.dep_out[n].discard(v)
+            if n != u:
+                self.dep_in[u].add(n)
+                self.dep_out[n].add(u)
+        for n in self.fuse.pop(v):
+            self.fuse[n].discard(v)
+            if n != u:
+                self.fuse[u].add(n)
+                self.fuse[n].add(u)
+        del self.blocks[v]
+        # drop all weight edges touching u or v, recompute u's neighborhood
+        for key in [k for k in self.weights if u in k or v in k]:
+            del self.weights[key]
+        bu = self.blocks[u]
+        for x, bx in self.blocks.items():
+            if x == u or x in self.fuse[u]:
+                continue
+            s = self.cost_model.merge_saving(bu, bx)
+            if s > 0 or x in self.dep_out[u] or x in self.dep_in[u]:
+                self.weights[_ekey(u, x)] = s
+        return u
+
+    # -- queries -----------------------------------------------------------
+    def cost(self) -> float:
+        return self.cost_model.partition_cost(list(self.blocks.values()))
+
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    def has_cycle(self) -> bool:
+        indeg = {b: len(self.dep_in[b]) for b in self.blocks}
+        q = [b for b, d in indeg.items() if d == 0]
+        seen = 0
+        while q:
+            x = q.pop()
+            seen += 1
+            for n in self.dep_out[x]:
+                indeg[n] -= 1
+                if indeg[n] == 0:
+                    q.append(n)
+        return seen != len(self.blocks)
+
+    def is_legal(self) -> bool:
+        """Full Def. 5 check (used by tests, not by the algorithms)."""
+        for b, info in self.blocks.items():
+            mem = self.members[b]
+            for i in mem:
+                if self.graph.fuse_forbidden[i] & mem:
+                    return False
+        return not self.has_cycle()
+
+    def topo_blocks(self) -> List[int]:
+        """Dependency-respecting block order, stable in program order."""
+        indeg = {b: len(self.dep_in[b]) for b in self.blocks}
+        heap = [(min(self.members[b]), b) for b, d in indeg.items() if d == 0]
+        heapq.heapify(heap)
+        order: List[int] = []
+        while heap:
+            _, b = heapq.heappop(heap)
+            order.append(b)
+            for n in sorted(self.dep_out[b]):
+                indeg[n] -= 1
+                if indeg[n] == 0:
+                    heapq.heappush(heap, (min(self.members[n]), n))
+        if len(order) != len(self.blocks):
+            raise RuntimeError("partition dependency graph has a cycle")
+        return order
+
+    def op_blocks(self) -> List[List[int]]:
+        """Topologically ordered blocks as lists of tape indices."""
+        return [sorted(self.members[b]) for b in self.topo_blocks()]
+
+    def tr_degrees(self) -> Dict[int, int]:
+        """Total degree of each block in the transitive reduction of Ê_d
+        (Thm. 3 condition 2: one endpoint must be a pendant vertex; the
+        paper's Prop. 2 proof works in the transitive reduction)."""
+        order = self.topo_blocks()
+        reach: Dict[int, Set[int]] = {}
+        for b in reversed(order):
+            r: Set[int] = set()
+            for n in self.dep_out[b]:
+                r.add(n)
+                r |= reach[n]
+            reach[b] = r
+        deg: Dict[int, int] = {b: 0 for b in self.blocks}
+        for b in self.blocks:
+            for n in self.dep_out[b]:
+                # edge b->n is redundant if some other successor reaches n
+                if not any(n in reach[m] for m in self.dep_out[b] if m != n):
+                    deg[b] += 1
+                    deg[n] += 1
+        return deg
+
+    # -- non-fusible sets θ (Def. 18) --------------------------------------
+    def theta(self, b: int) -> FrozenSet[int]:
+        """Def. 18: blocks connected with ``b`` in Ê_d through a path that
+        contains a non-fusible edge.  We follow directed descendant paths
+        (the orientation that reproduces the paper's a,e worked example);
+        Thm. 3's guarantee — unintrusive merges preserve optimality — is
+        validated by tests against exhaustive search."""
+        out: Set[int] = set()
+        seen: Set[Tuple[int, bool]] = set()
+        stack: List[Tuple[int, bool]] = [(b, False)]
+        while stack:
+            x, nf = stack.pop()
+            for n in self.dep_out[x]:
+                nnf = nf or (n in self.fuse[x])
+                if (n, nnf) in seen:
+                    continue
+                seen.add((n, nnf))
+                if nnf:
+                    out.add(n)
+                stack.append((n, nnf))
+        return frozenset(out)

@@ -1,0 +1,2 @@
+from .sharding import (RULES_SERVE, RULES_TRAIN, logical_to_mesh,     # noqa
+                       batch_spec, params_specs)

@@ -1,0 +1,103 @@
+"""Logical-axis sharding rules (MaxText-style, minimal).
+
+Every parameter leaf carries a tuple of logical axis names (from the model
+init); rules map logical names to mesh axes.  ``logical_to_mesh`` is
+shape-aware: a dimension that does not divide evenly by its mesh-axis size
+falls back to replication (e.g. starcoder2's 2 kv-heads on a 16-way model
+axis).
+
+Training rules implement FSDP(ZeRO-3)×TP×EP: the "embed" (d_model) dimension
+shards over the data axis — parameters are fully sharded over all 256 chips
+of a pod, all-gathered per layer group inside the scan (XLA GSPMD inserts
+the all-gathers) — while heads/ffn/vocab/experts shard over the model axis.
+Serving rules use pure TP (+EP over model, expert-ffn over data for the
+235B MoE so its experts span all 256 chips).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+RULES_TRAIN: Dict[str, Any] = {
+    "embed": "data",            # FSDP / ZeRO-3 over the data axis
+    "vocab": "model",
+    # The embedding TABLE keeps its vocab dim unsharded (a gather over a
+    # row-sharded table forces SPMD to all-gather the whole table — 2.5 GB
+    # on qwen3; measured in EXPERIMENTS.md §Perf) and shards d_model over
+    # the model axis instead: the token gather is then shard-local.
+    "vocab_table": None,
+    "embed_table": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "expert": "model",          # expert parallelism
+    "expert_ffn": None,
+    "mamba_inner": "model",
+    "layers": None,             # scan axis is never sharded
+}
+
+RULES_SERVE: Dict[str, Any] = {
+    "embed": None,
+    "vocab": "model",
+    "vocab_table": None,
+    "embed_table": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "expert": "model",
+    "expert_ffn": "data",       # 2-D expert sharding for the 235B serve fit
+    "mamba_inner": "model",
+    "layers": None,
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def logical_to_mesh(shape: Tuple[int, ...], logical: Tuple, rules: Dict,
+                    mesh: Mesh) -> P:
+    """PartitionSpec for one leaf, dropping non-divisible dims to None."""
+    spec = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name is not None else None
+        if axis is None or axis in used:
+            spec.append(None)
+            continue
+        if dim % _axis_size(mesh, axis) != 0:
+            spec.append(None)          # e.g. kv_heads=2 on a 16-way axis
+            continue
+        used.add(axis)
+        spec.append(axis)
+    return P(*spec)
+
+
+def params_specs(param_shapes, axes_tree, rules: Dict, mesh: Mesh):
+    """Tree of PartitionSpec matching the params tree (axes_tree's tuples
+    are picked up by flatten_up_to against the params structure)."""
+    return jax.tree.map(
+        lambda leaf, ax: logical_to_mesh(leaf.shape, ax, rules, mesh),
+        param_shapes, axes_tree)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Batch dimension shards over every data-parallel mesh axis present."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def shard_tree(tree, specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)

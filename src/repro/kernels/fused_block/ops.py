@@ -1,0 +1,29 @@
+"""jit'd public wrapper around the fused-block Pallas kernel, with automatic
+fallback to the XLA per-block path when the flat tiler cannot express the
+block (strided views, reductions, mixed domains)."""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+
+from ...core.executor import make_block_fn
+from ...core.ir import Op
+from .kernel import FusedBlockUnsupported, build_fused_kernel
+
+
+def fused_block_fn(ops: Sequence[Op], *, interpret: bool = True,
+                   tile: int = 8 * 128):
+    """Best-effort fused executable for a WSP block.
+
+    Returns ``(fn, input_uids, output_uids, used_pallas)``; ``fn`` is jitted
+    either over the Pallas kernel or over the XLA fallback."""
+    try:
+        fn, ins, outs = build_fused_kernel(ops, tile=tile, interpret=interpret)
+        return jax.jit(fn), ins, outs, True
+    except FusedBlockUnsupported:
+        import jax.numpy as jnp
+        raw, ins, outs = make_block_fn(ops)
+        fn = lambda *bufs: raw(*bufs, jnp.zeros((0,), jnp.int32))  # noqa: E731
+        return jax.jit(fn), ins, outs, False

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the fused-block kernel: execute the block's ops one
+by one, materializing every intermediate (NO fusion, NO contraction) —
+semantically the ⊥ partition's execution."""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.executor import block_io
+from ...core.ir import Op, View
+
+_UNARY = {
+    "copy": lambda x: x, "sqrt": jnp.sqrt, "exp": jnp.exp, "log": jnp.log,
+    "abs": jnp.abs, "neg": jnp.negative, "sin": jnp.sin, "cos": jnp.cos,
+    "erf": jax.scipy.special.erf, "sign": jnp.sign, "rsqrt": jax.lax.rsqrt,
+    "tanh": jnp.tanh, "square": jnp.square, "reciprocal": lambda x: 1.0 / x,
+    "floor": jnp.floor,
+}
+_BINARY = {
+    "add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
+    "div": jnp.divide, "pow": jnp.power, "maximum": jnp.maximum,
+    "minimum": jnp.minimum, "greater": jnp.greater, "less": jnp.less,
+    "mod": jnp.mod,
+}
+
+
+def reference_block(ops: Sequence[Op], *bufs):
+    """Execute a block unfused; returns the same outputs as the kernel."""
+    work = [op for op in ops if not op.is_system()]
+    inputs, outputs, _ = block_io(ops)
+    env: Dict[int, jnp.ndarray] = {u: b for u, b in zip(inputs, bufs)}
+    meta = {}
+    for op in work:
+        for v in (*op.in_views(), *op.out_views()):
+            meta[v.base.uid] = (v.base.size, v.base.dtype)
+    for u, (size, dt) in meta.items():
+        if u not in env:
+            env[u] = jnp.zeros((size,), dt)
+    for op in work:
+        vals = [env[v.base.uid] if isinstance(v, View) else v
+                for v in op.inputs]
+        oc = op.opcode
+        if oc in _UNARY:
+            out = _UNARY[oc](*vals)
+        elif oc in _BINARY:
+            out = _BINARY[oc](*vals)
+        else:
+            out = jnp.where(*vals)
+        u = op.out.base.uid
+        env[u] = jnp.broadcast_to(out, (meta[u][0],)).astype(meta[u][1])
+    return tuple(env[u] for u in outputs)

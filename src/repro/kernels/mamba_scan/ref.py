@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the selective SSM scan."""
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_mamba(x, dt, b, c, a, d, state=None, return_state=False):
+    """x, dt: (B,T,d_inner); b,c: (B,T,d_state); a: (d_inner,d_state);
+    d: (d_inner,) -> y: (B,T,d_inner).  ``state``: optional initial SSM
+    state (B, d_inner, d_state)."""
+    bsz, t, d_inner = x.shape
+    d_state = b.shape[-1]
+    xf, dtf, bf, cf = (z.astype(jnp.float32) for z in (x, dt, b, c))
+    af, df = a.astype(jnp.float32), d.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[:, :, None] * af[None])        # (B, d_inner, d_state)
+        h = da * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, c_t) + df[None] * x_t
+        return h, y
+
+    h0 = state if state is not None else jnp.zeros((bsz, d_inner, d_state),
+                                                   jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    # chunked scan with per-chunk remat: the flat scan saves the (B, d_in,
+    # d_state) carry for EVERY token in the backward pass (2.1 GB/layer at
+    # 4k — the jamba train memory dominator); chunking saves only chunk
+    # boundaries and recomputes inside.
+    chunk = 256
+    if t >= 2 * chunk and t % chunk == 0:
+        def chunk_body(h, xs_c):
+            return jax.lax.scan(step, h, xs_c)
+        xs_c = jax.tree.map(
+            lambda a: a.reshape(t // chunk, chunk, *a.shape[1:]), xs)
+        hT, y = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs_c)
+        y = y.reshape(t, *y.shape[2:])
+    else:
+        hT, y = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(y, 0, 1).astype(x.dtype)
+    return (y, hT) if return_state else y

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for fused add+RMSNorm."""
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_add_rmsnorm(x, residual, gamma, *, eps: float = 1e-6,
+                          plus_one: bool = False):
+    h = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    g = gamma.astype(jnp.float32)
+    if plus_one:
+        g = g + 1.0
+    return (h * inv * g).astype(x.dtype), h.astype(x.dtype)

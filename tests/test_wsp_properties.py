@@ -1,0 +1,427 @@
+"""Hypothesis property tests for the WSP fusion core.
+
+Invariants under test (paper references in brackets):
+ * every algorithm returns a legal partition           [Def. 5]
+ * merge_saving >= 0 for every cost model              [Def. 6 monotonicity]
+ * Prop. 1 closed form == generic block-cost difference [Prop. 1]
+ * optimal() == brute-force minimum on tiny tapes      [Def. 7]
+ * cost ordering: optimal <= {greedy, linear, unintrusive} <= singleton
+ * execution equivalence: every partition algorithm computes the same
+   values as the NumPy oracle on random lazy programs  [Thm. 2 corollary]
+ * incremental weight maintenance == fresh recompute   [Def. 17]
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BohriumCost, build_graph, closed_form_saving,
+                        make_cost_model, partition)
+from repro.core.partition import PartitionState
+from repro.core import lazy as bh
+from repro.core.lazy import fresh_runtime
+
+ALGOS = ("singleton", "linear", "greedy", "unintrusive", "optimal")
+MODELS = ("bohrium", "max_contract", "max_locality", "robinson", "tpu", "tpu_dist")
+
+
+# ---------------------------------------------------------------------------
+# Random lazy-program generator: a sequence of actions over a pool of arrays.
+# The same action list drives both the lazy runtime and a NumPy oracle.
+# ---------------------------------------------------------------------------
+
+ACTION = st.sampled_from(
+    ["alloc", "binop", "unary", "iadd", "shift_binop", "setitem",
+     "reduce", "delete", "copy"])
+OPS2 = st.sampled_from(["add", "sub", "mul", "maximum", "minimum"])
+OPS1 = st.sampled_from(["sqrt_abs", "exp_clip", "neg", "square"])
+
+
+@st.composite
+def programs(draw, max_actions=14):
+    n0 = draw(st.integers(2, 4))
+    size = draw(st.sampled_from([4, 5, 8]))
+    actions = [("alloc", i % 3) for i in range(n0)]
+    for _ in range(draw(st.integers(3, max_actions))):
+        a = draw(ACTION)
+        if a == "alloc":
+            actions.append(("alloc", draw(st.integers(0, 2))))
+        elif a == "binop":
+            actions.append(("binop", draw(OPS2), draw(st.integers(0, 9)),
+                            draw(st.integers(0, 9))))
+        elif a == "unary":
+            actions.append(("unary", draw(OPS1), draw(st.integers(0, 9))))
+        elif a == "iadd":
+            actions.append(("iadd", draw(st.integers(0, 9)),
+                            draw(st.integers(0, 9))))
+        elif a == "shift_binop":
+            actions.append(("shift_binop", draw(OPS2), draw(st.integers(0, 9)),
+                            draw(st.integers(0, 9))))
+        elif a == "setitem":
+            actions.append(("setitem", draw(st.integers(0, 9)),
+                            draw(st.integers(0, 9))))
+        elif a == "reduce":
+            actions.append(("reduce", draw(st.integers(0, 9))))
+        elif a == "delete":
+            actions.append(("delete", draw(st.integers(0, 9))))
+        elif a == "copy":
+            actions.append(("copy", draw(st.integers(0, 9))))
+    return size, actions
+
+
+class _NumpyPool:
+    def __init__(self, size):
+        self.size = size
+        self.arrays = []
+
+    def run(self, actions):
+        for act in actions:
+            self._step(act)
+        return [None if a is None else a.copy() for a in self.arrays]
+
+    def live(self, idx):
+        live = [i for i, a in enumerate(self.arrays) if a is not None]
+        return live[idx % len(live)] if live else None
+
+    def _step(self, act):
+        kind = act[0]
+        n = self.size
+        if kind == "alloc":
+            self.arrays.append(np.full(n, float(act[1]) * 0.5))
+            return
+        if not any(a is not None for a in self.arrays):
+            self.arrays.append(np.zeros(n))
+        if kind == "binop":
+            i, j = self.live(act[2]), self.live(act[3])
+            self.arrays.append(_np_op2(act[1], self.arrays[i], self.arrays[j]))
+        elif kind == "unary":
+            i = self.live(act[2])
+            self.arrays.append(_np_op1(act[1], self.arrays[i]))
+        elif kind == "iadd":
+            i, j = self.live(act[1]), self.live(act[2])
+            self.arrays[i] = self.arrays[i] + self.arrays[j]
+        elif kind == "shift_binop":
+            i, j = self.live(act[2]), self.live(act[3])
+            out = _np_op2(act[1], self.arrays[i][1:], self.arrays[j][:-1])
+            self.arrays.append(np.concatenate([out, out[-1:]]) * 0 + np.pad(out, (0, 1)))
+        elif kind == "setitem":
+            i, j = self.live(act[1]), self.live(act[2])
+            if i != j:
+                self.arrays[i] = self.arrays[i].copy()
+                self.arrays[i][1:] = self.arrays[j][:-1]
+        elif kind == "reduce":
+            i = self.live(act[1])
+            self.arrays.append(np.full(n, self.arrays[i].sum()))
+        elif kind == "delete":
+            i = self.live(act[1])
+            live = [k for k, a in enumerate(self.arrays) if a is not None]
+            if len(live) > 1:
+                self.arrays[i] = None
+        elif kind == "copy":
+            i = self.live(act[1])
+            self.arrays.append(self.arrays[i].copy())
+
+
+def _np_op2(name, a, b):
+    return {"add": np.add, "sub": np.subtract, "mul": np.multiply,
+            "maximum": np.maximum, "minimum": np.minimum}[name](a, b)
+
+
+def _np_op1(name, a):
+    if name == "sqrt_abs":
+        return np.sqrt(np.abs(a))
+    if name == "exp_clip":
+        return np.exp(np.minimum(a, 2.0))
+    if name == "neg":
+        return -a
+    return np.square(a)
+
+
+class _LazyPool(_NumpyPool):
+    def _step(self, act):
+        kind = act[0]
+        n = self.size
+        if kind == "alloc":
+            self.arrays.append(bh.full(n, float(act[1]) * 0.5))
+            return
+        if not any(a is not None for a in self.arrays):
+            self.arrays.append(bh.zeros(n))
+        if kind == "binop":
+            i, j = self.live(act[2]), self.live(act[3])
+            self.arrays.append(_bh_op2(act[1], self.arrays[i], self.arrays[j]))
+        elif kind == "unary":
+            i = self.live(act[2])
+            self.arrays.append(_bh_op1(act[1], self.arrays[i]))
+        elif kind == "iadd":
+            i, j = self.live(act[1]), self.live(act[2])
+            self.arrays[i] = self.arrays[i] + self.arrays[j]
+        elif kind == "shift_binop":
+            i, j = self.live(act[2]), self.live(act[3])
+            out = _bh_op2(act[1], self.arrays[i][1:], self.arrays[j][:-1])
+            padded = bh.zeros(n)
+            padded[: n - 1] = out
+            self.arrays.append(padded)
+        elif kind == "setitem":
+            i, j = self.live(act[1]), self.live(act[2])
+            if i != j:
+                c = self.arrays[i].copy()
+                c[1:] = self.arrays[j][:-1]
+                self.arrays[i] = c
+        elif kind == "reduce":
+            i = self.live(act[1])
+            s = self.arrays[i].sum()
+            out = bh.zeros(n)
+            out += s.broadcast_to((n,))
+            self.arrays.append(out)
+        elif kind == "delete":
+            i = self.live(act[1])
+            live = [k for k, a in enumerate(self.arrays) if a is not None]
+            if len(live) > 1:
+                self.arrays[i].delete()
+                self.arrays[i] = None
+        elif kind == "copy":
+            i = self.live(act[1])
+            self.arrays.append(self.arrays[i].copy())
+
+    def run(self, actions):
+        for act in actions:
+            self._step(act)
+        return [None if a is None else a.numpy() for a in self.arrays]
+
+
+def _bh_op2(name, a, b):
+    if name in ("maximum", "minimum"):
+        return getattr(bh, name)(a, b)
+    return {"add": a.__add__, "sub": a.__sub__, "mul": a.__mul__}[name](b)
+
+
+def _bh_op1(name, a):
+    if name == "sqrt_abs":
+        return bh.sqrt(absolute_bh(a))
+    if name == "exp_clip":
+        return bh.exp(bh.minimum(a, 2.0))
+    if name == "neg":
+        return -a
+    return bh.square(a)
+
+
+def absolute_bh(a):
+    return bh.absolute(a)
+
+
+def _tape_for(size, actions):
+    """Record the program and return the tape (without executing)."""
+    with fresh_runtime() as rt:
+        pool = _LazyPool(size)
+        for act in actions:
+            pool._step(act)
+        tape = list(rt.tape)
+        rt.tape.clear()
+        # drop the pool before the runtime switches back
+        pool.arrays = []
+    return tape
+
+
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(programs())
+def test_all_algorithms_legal_and_ordered(prog):
+    size, actions = prog
+    tape = _tape_for(size, actions)
+    if not tape:
+        return
+    costs = {}
+    for algo in ALGOS:
+        res = partition(tape, algorithm=algo, cost_model="bohrium",
+                        node_budget=3000)
+        assert res.state.is_legal(), algo
+        costs[algo] = res.cost
+    for a in ("linear", "greedy", "unintrusive"):
+        assert costs["optimal"] <= costs[a] + 1e-9 <= costs["singleton"] + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(programs(), st.sampled_from(MODELS))
+def test_merge_saving_nonnegative(prog, model_name):
+    """Def. 6 monotonicity: merging any two blocks never increases cost."""
+    size, actions = prog
+    tape = _tape_for(size, actions)
+    if not tape:
+        return
+    g = build_graph(tape)
+    model = make_cost_model(model_name)
+    st_ = PartitionState(g, model)
+    ids = sorted(st_.blocks)
+    for u in ids:
+        for v in ids:
+            if u < v:
+                s = model.merge_saving(st_.blocks[u], st_.blocks[v])
+                assert s >= -1e-9, (model_name, u, v, s)
+
+
+@settings(max_examples=25, deadline=None)
+@given(programs())
+def test_prop1_closed_form(prog):
+    """Prop. 1: the closed-form merge saving equals the block-cost
+    difference for the Bohrium model, for dependency-ordered block pairs."""
+    size, actions = prog
+    tape = _tape_for(size, actions)
+    if not tape:
+        return
+    g = build_graph(tape)
+    model = BohriumCost()
+    st_ = PartitionState(g, model)
+    ids = sorted(st_.blocks)
+    for u in ids:
+        for v in ids:
+            if u < v and st_.legal_merge(u, v):
+                generic = model.merge_saving(st_.blocks[u], st_.blocks[v])
+                closed = closed_form_saving(st_.blocks[u], st_.blocks[v])
+                assert abs(generic - closed) < 1e-9, (u, v, generic, closed)
+
+
+def _brute_force_min(tape, model_name, cap=9):
+    """Exhaustive minimum over all legal partitions (tiny tapes only),
+    explored as all distinct reachable merge sequences (Prop. 2 guarantees
+    this reaches every legal partition)."""
+    g = build_graph(tape)
+    best = [float("inf")]
+    seen = set()
+
+    def rec(state):
+        key = frozenset(frozenset(m) for m in state.members.values())
+        if key in seen:
+            return
+        seen.add(key)
+        best[0] = min(best[0], state.cost())
+        ids = sorted(state.blocks)
+        for i, u in enumerate(ids):
+            for v in ids[i + 1:]:
+                if state.legal_merge(u, v):
+                    child = state.copy()
+                    child.merge(u, v)
+                    rec(child)
+
+    st0 = PartitionState(g, make_cost_model(model_name))
+    rec(st0)
+    return best[0]
+
+
+@settings(max_examples=12, deadline=None)
+@given(programs(max_actions=4), st.sampled_from(["bohrium", "max_contract"]))
+def test_optimal_matches_brute_force(prog, model_name):
+    size, actions = prog
+    tape = _tape_for(size, actions[:7])
+    if not tape or len(tape) > 9:
+        return
+    res = partition(tape, algorithm="optimal", cost_model=model_name,
+                    node_budget=200_000)
+    if not res.stats.get("proved_optimal"):
+        return
+    bf = _brute_force_min(tape, model_name)
+    assert abs(res.cost - bf) < 1e-9, (res.cost, bf)
+
+
+@settings(max_examples=15, deadline=None)
+@given(programs(), st.sampled_from(ALGOS))
+def test_execution_equivalence(prog, algo):
+    """Thm. 2 corollary: any legal partition computes the same values."""
+    size, actions = prog
+    ref = _NumpyPool(size).run(actions)
+    with fresh_runtime(algorithm=algo):
+        got = _LazyPool(size).run(actions)
+    assert len(ref) == len(got)
+    for r, g in zip(ref, got):
+        if r is None:
+            assert g is None
+        else:
+            np.testing.assert_allclose(g, r, rtol=1e-10, atol=1e-12,
+                                       err_msg=f"{algo}: {actions}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(programs(), st.randoms())
+def test_incremental_weights_match_recompute(prog, rnd):
+    """Def. 17: after arbitrary legal merges, the maintained weight graph
+    equals a fresh recompute from block summaries."""
+    size, actions = prog
+    tape = _tape_for(size, actions)
+    if not tape:
+        return
+    g = build_graph(tape)
+    model = make_cost_model("bohrium")
+    st_ = PartitionState(g, model)
+    for _ in range(4):
+        ids = sorted(st_.blocks)
+        pairs = [(u, v) for i, u in enumerate(ids) for v in ids[i + 1:]
+                 if st_.legal_merge(u, v)]
+        if not pairs:
+            break
+        st_.merge(*rnd.choice(pairs))
+    for (u, v), w in st_.weights.items():
+        fresh = model.merge_saving(st_.blocks[u], st_.blocks[v])
+        assert abs(w - fresh) < 1e-9
+
+
+def test_pairwise_weights_overestimate_reuse():
+    """Paper §VI (Fig. 21's point): static pair-wise locality weights
+    over-estimate reuse — fusing k identical accesses saves C(k,2) under
+    Max Locality but only k-1 actual external accesses under Bohrium."""
+    with fresh_runtime() as rt:
+        x = bh.ones(8)
+        reads = [x * float(i + 2) for i in range(4)]   # 4 readers of x
+        tape = list(rt.tape)
+        rt.tape.clear()
+        for r in reads:
+            r._alive = False    # silence DELs after runtime swap
+        x._alive = False
+    g = build_graph(tape)
+    reader_idx = [i for i, op in enumerate(tape) if op.opcode == "mul"]
+    ml = make_cost_model("max_locality")
+    boh = make_cost_model("bohrium")
+    st_ml = PartitionState(g, ml)
+    st_boh = PartitionState(g, boh)
+
+    def total_saving(state, model):
+        ids = [state.block_of[i] for i in reader_idx]
+        merged = state.blocks[ids[0]]
+        parts = [state.blocks[i] for i in ids]
+        for b in parts[1:]:
+            merged = merged.merged_with(b)
+        return sum(model.block_cost(b) for b in parts) - model.block_cost(merged)
+
+    save_ml = total_saving(st_ml, ml)
+    save_boh = total_saving(st_boh, boh)
+    assert save_ml == 6.0          # C(4,2) pairs — the over-estimate
+    assert save_boh == 3 * 8       # (k-1) x 8 elements — exact reuse
+
+
+def test_tpu_fma_cost_model_monotone_and_rewards_fma():
+    """Paper §VII realized: the FMA-rewarding model prefers co-locating a
+    mul with its consuming add, and stays monotone."""
+    from repro.core import make_cost_model, build_graph, partition
+    with fresh_runtime() as rt:
+        a = bh.ones(1024)
+        b_ = bh.ones(1024)
+        t = a * b_          # mul
+        c = t + 1.0         # consuming add -> FMA pair when fused
+        t.delete()
+        tape = list(rt.tape)
+        rt.tape.clear()
+        for x in (a, b_, c):
+            x._alive = False
+    g = build_graph(tape)
+    model = make_cost_model("tpu_fma")
+    st_ = PartitionState(g, model)
+    ids = sorted(st_.blocks)
+    for u in ids:
+        for v in ids:
+            if u < v:
+                assert model.merge_saving(st_.blocks[u], st_.blocks[v]) >= -1e-12
+    res = partition(tape, algorithm="greedy", cost_model="tpu_fma")
+    blocks = res.op_blocks()
+    mul_i = next(i for i, op in enumerate(tape) if op.opcode == "mul")
+    add_i = next(i for i, op in enumerate(tape) if op.opcode == "add")
+    blk = next(b for b in blocks if mul_i in b)
+    assert add_i in blk            # the FMA pair fused
