@@ -1,0 +1,156 @@
+"""Partition-scaling benchmark: staged pipeline vs the seed O(V²) path.
+
+Measures ``stats["t_graph_s"] + stats["t_partition_s"]`` (ISSUE 1 acceptance
+metric) for two tape families at growing op counts:
+
+* ``chain``   — segmented elementwise chains (black-scholes-like temporaries:
+  every base has O(1) accessors, the near-linear sweet spot),
+* ``stencil`` — ping-pong heat-equation stencil (two iteration domains, so
+  the bit-identical E_f genuinely contains cross-domain edges).
+
+The staged engine is ``build_graph`` (base-indexed) + sparse weight graph +
+heap greedy; the reference engine is ``build_graph_reference`` + dense
+all-pairs weights + rescan greedy — the exact seed path.  Both must produce
+identical partition cost under the bohrium cost model.
+
+    PYTHONPATH=src python -m benchmarks.partition_scaling            # table
+    PYTHONPATH=src python -m benchmarks.partition_scaling --ci      # asserts
+
+``--ci`` is the smoke gate: the staged engine must graph+partition a 2k-op
+tape of each family in < 5 s, and must match the reference cost/blocks
+exactly at a size where the reference is still cheap to run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import partition
+from repro.core import lazy as bh
+from repro.core.lazy import fresh_runtime
+
+
+def chain_tape(n_ops: int, n: int = 1024, seg_iters: int = 25):
+    """Independent segments of x <- x*a + b chains with dead temporaries.
+    ~4 ops per iteration (mul, add, 2×del); segments keep greedy's fused
+    blocks bounded, as per-flush tapes are in real programs."""
+    with fresh_runtime() as rt:
+        keep = []
+        while len(rt.tape) < n_ops:
+            x = bh.full(n, 1.0)
+            for _ in range(seg_iters):
+                t = x * 1.01
+                y = t + 0.5
+                t.delete()
+                x.delete()
+                x = y
+            keep.append(x)
+        tape = list(rt.tape)[:n_ops]
+        rt.tape.clear()
+        for a in keep:
+            a._alive = False
+    return tape
+
+
+def stencil_tape(n_ops: int, grid: int = 48):
+    """Ping-pong 5-point heat-equation stencil, scaled up: ~11 ops per
+    sweep (8 same-domain elementwise + full-grid copy + dels)."""
+    with fresh_runtime() as rt:
+        g = bh.zeros((grid, grid))
+        while len(rt.tape) < n_ops:
+            inner = (g[1:-1, :-2] + g[1:-1, 2:] + g[:-2, 1:-1]
+                     + g[2:, 1:-1]) * 0.25
+            smoothed = inner * 0.9 + inner * 0.1      # extra elementwise work
+            g2 = g.copy()
+            g2[1:-1, 1:-1] = smoothed
+            inner.delete()
+            smoothed.delete()
+            g.delete()
+            g = g2
+        tape = list(rt.tape)[:n_ops]
+        rt.tape.clear()
+        g._alive = False
+    return tape
+
+
+TAPES = {"chain": chain_tape, "stencil": stencil_tape}
+
+
+def run_engine(tape, engine: str) -> Dict:
+    if engine == "staged":
+        res = partition(tape, algorithm="greedy", cost_model="bohrium")
+    else:
+        res = partition(tape, algorithm="greedy_reference",
+                        cost_model="bohrium", builder="reference",
+                        dense_weights=True)
+    t = res.stats["t_graph_s"] + res.stats["t_partition_s"]
+    return {"t": t, "t_graph": res.stats["t_graph_s"],
+            "t_partition": res.stats["t_partition_s"],
+            "cost": res.cost, "n_blocks": res.n_blocks,
+            "blocks": res.op_blocks()}
+
+
+def bench(sizes, ref_cap: int, family: str) -> List[str]:
+    rows = []
+    make = TAPES[family]
+    for n_ops in sizes:
+        tape = make(n_ops)
+        fast = run_engine(tape, "staged")
+        line = (f"partition_scaling/{family}/{len(tape)}ops,"
+                f"{fast['t'] * 1e6:.0f},"
+                f"graph={fast['t_graph']:.3f}s"
+                f";partition={fast['t_partition']:.3f}s"
+                f";cost={fast['cost']:.0f};blocks={fast['n_blocks']}")
+        if len(tape) <= ref_cap:
+            ref = run_engine(tape, "reference")
+            assert ref["cost"] == fast["cost"], \
+                (family, n_ops, ref["cost"], fast["cost"])
+            assert ref["blocks"] == fast["blocks"], (family, n_ops)
+            line += (f";ref={ref['t']:.3f}s"
+                     f";speedup={ref['t'] / max(fast['t'], 1e-9):.1f}x")
+        rows.append(line)
+        print(line, flush=True)
+    return rows
+
+
+def ci_check() -> None:
+    """CI smoke: 2k-op tapes must graph+partition in < 5 s on the staged
+    engine, and the staged engine must match the reference exactly."""
+    for family, make in TAPES.items():
+        tape = make(400)
+        fast, ref = run_engine(tape, "staged"), run_engine(tape, "reference")
+        assert fast["cost"] == ref["cost"], (family, fast["cost"], ref["cost"])
+        assert fast["blocks"] == ref["blocks"], family
+        print(f"ci/{family}/400ops: staged == reference "
+              f"(cost {fast['cost']:.0f}), speedup "
+              f"{ref['t'] / max(fast['t'], 1e-9):.1f}x", flush=True)
+        tape = make(2000)
+        fast = run_engine(tape, "staged")
+        print(f"ci/{family}/2000ops: graph+partition "
+              f"{fast['t']:.2f}s ({fast['n_blocks']} blocks)", flush=True)
+        assert fast["t"] < 5.0, (family, fast["t"])
+    print("partition-scaling CI check passed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", action="store_true", help="smoke assertions only")
+    ap.add_argument("--sizes", default="250,500,1000,2000")
+    ap.add_argument("--ref-cap", type=int, default=1000,
+                    help="largest size to also run on the O(V²) reference")
+    ap.add_argument("--family", default=None, choices=(None, *TAPES))
+    args = ap.parse_args()
+    if args.ci:
+        ci_check()
+        return
+    sizes = [int(s) for s in args.sizes.split(",")]
+    print("name,us_per_call,derived")
+    for family in ([args.family] if args.family else list(TAPES)):
+        bench(sizes, args.ref_cap, family)
+
+
+if __name__ == "__main__":
+    main()

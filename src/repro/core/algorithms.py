@@ -2,7 +2,10 @@
 
 * ``singleton``   — ⊥ partition, no fusion (the paper's "Singleton" baseline)
 * ``linear``      — §IV-E sequential sweep, O(n²), no graph representation
-* ``greedy``      — Fig. 6 heaviest-weight-edge contraction
+* ``greedy``      — Fig. 6 heaviest-weight-edge contraction, implemented as
+  a lazy max-heap with stale-entry invalidation: each contraction costs
+  O(degree·log E) instead of the reference's O(E) full rescan.  The merge
+  sequence is bit-identical to ``greedy_reference`` (regression-tested).
 * ``unintrusive`` — Fig. 5 provably-optimal preconditioning merges (Thm. 3)
 * ``optimal``     — Fig. 10 branch-and-bound over weight-edge cut masks with
   the monotonicity bound; an explicit node budget replaces the paper's
@@ -13,13 +16,14 @@ All algorithms are cost-model agnostic (any monotone ``CostModel``).
 
 from __future__ import annotations
 
+import heapq
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .blocks import BlockInfo
 from .cost import CostModel, make_cost_model
-from .fusion import WSPGraph, build_graph
+from .fusion import WSPGraph, build_graph, build_graph_reference
 from .ir import Op
 from .partition import PartitionState, _ekey
 
@@ -50,8 +54,6 @@ def linear(state: PartitionState) -> PartitionState:
     cur = state.block_of[0]
     for i in range(1, n):
         b = state.block_of[i]
-        if state.blocks[b].ops[0].is_system() and False:
-            pass
         if state.legal_merge(cur, b):
             cur = state.merge(cur, b)
         else:
@@ -60,13 +62,35 @@ def linear(state: PartitionState) -> PartitionState:
 
 
 def greedy(state: PartitionState) -> PartitionState:
-    """Fig. 6: repeatedly contract the heaviest legal weight edge."""
+    """Fig. 6 via a lazy max-heap: pop the heaviest entry, skip it when
+    stale (edge dropped, endpoint contracted away, or weight recomputed
+    since the push), otherwise merge/drop exactly like the reference.
+    After a merge only the recomputed incident edges are (re)pushed."""
+    heap = [(-w, u, v) for (u, v), w in state.weights.items()]
+    heapq.heapify(heap)
+    while heap:
+        nw, u, v = heapq.heappop(heap)
+        if state.weights.get((u, v)) != -nw:
+            continue                               # stale entry
+        if state.legal_merge(u, v):
+            state.merge(u, v)
+            for x in state._adj[u]:
+                a, b = _ekey(u, x)
+                heapq.heappush(heap, (-state.weights[(a, b)], a, b))
+        else:
+            state.drop_weight(u, v)
+    return state
+
+
+def greedy_reference(state: PartitionState) -> PartitionState:
+    """Fig. 6, reference implementation: full O(E) rescan per contraction.
+    Kept as the oracle for the heap variant's merge-sequence regression."""
     while state.weights:
         (u, v), w = max(state.weights.items(), key=lambda kv: (kv[1], -kv[0][0], -kv[0][1]))
         if state.legal_merge(u, v):
             state.merge(u, v)
         else:
-            del state.weights[(u, v)]
+            state.drop_weight(u, v)
     return state
 
 
@@ -104,7 +128,7 @@ def _find_candidate(state: PartitionState) -> Optional[Tuple[int, int]]:
     """
     for key in sorted(state.weights):
         if not state.legal_merge(*key):
-            del state.weights[key]
+            state.drop_weight(*key)
     if not state.weights:
         return None
     reach = _reach_sets(state)
@@ -225,7 +249,7 @@ def optimal(state: PartitionState, node_budget: int = 100_000,
     state = unintrusive(state)
     for key in sorted(state.weights):
         if not state.legal_merge(*key):
-            del state.weights[key]
+            state.drop_weight(*key)
     incumbent = greedy(state.copy())
     best_cost = incumbent.cost()
     best_mask: Optional[int] = None
@@ -283,21 +307,32 @@ _ALGORITHMS = {
     "singleton": singleton,
     "linear": linear,
     "greedy": greedy,
+    "greedy_reference": greedy_reference,
     "unintrusive": unintrusive,
     "optimal": optimal,
 }
 
+_BUILDERS = {"indexed": build_graph, "reference": build_graph_reference}
+
 
 def partition(ops: Sequence[Op], algorithm: str = "greedy",
               cost_model="bohrium", node_budget: int = 100_000,
-              graph: Optional[WSPGraph] = None) -> PartitionResult:
-    """Front door: tape → WSP graph → partition under a cost model."""
+              graph: Optional[WSPGraph] = None,
+              builder: str = "indexed",
+              dense_weights: Optional[bool] = None) -> PartitionResult:
+    """Front door: the graph + partition stages of the scheduler pipeline
+    (tape → WSP graph → partition under a cost model).
+
+    ``builder='reference'`` / ``dense_weights=True`` select the seed O(V²)
+    path — used by differential tests and the scaling benchmark oracle."""
     if isinstance(cost_model, str):
         cost_model = make_cost_model(cost_model)
+    if builder not in _BUILDERS:
+        raise ValueError(f"unknown builder {builder!r}; have {sorted(_BUILDERS)}")
     t0 = time.perf_counter()
-    g = graph if graph is not None else build_graph(list(ops))
+    g = graph if graph is not None else _BUILDERS[builder](list(ops))
     t_graph = time.perf_counter() - t0
-    state = PartitionState(g, cost_model)
+    state = PartitionState(g, cost_model, dense=dense_weights)
     stats: Dict[str, float] = {}
     t1 = time.perf_counter()
     if algorithm == "optimal":
@@ -305,7 +340,7 @@ def partition(ops: Sequence[Op], algorithm: str = "greedy",
         if stats.get("bb_exhausted_budget"):
             # budget exhausted: the preconditioned incumbent may lose to a
             # plain greedy sweep — never return worse than greedy.
-            alt = greedy(PartitionState(g, cost_model))
+            alt = greedy(PartitionState(g, cost_model, dense=dense_weights))
             if alt.cost() < state.cost():
                 state = alt
                 stats["fell_back_to_greedy"] = True

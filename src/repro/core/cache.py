@@ -7,7 +7,8 @@ same operations hash identically (exactly Bohrium's behaviour)."""
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
 
 from .executor import block_signature
 from .ir import Op
@@ -18,11 +19,15 @@ def tape_signature(tape: Sequence[Op], algorithm: str, cost_model: str) -> Tuple
 
 
 class MergeCache:
+    """LRU: a steady mix of hot tapes (training step + eval step + logging
+    flush) stays resident even when one-off tapes churn past capacity."""
+
     def __init__(self, capacity: int = 512):
         self.capacity = capacity
-        self._store: Dict[Tuple, List[List[int]]] = {}
+        self._store: "OrderedDict[Tuple, List[List[int]]]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key: Tuple) -> Optional[List[List[int]]]:
         got = self._store.get(key)
@@ -30,13 +35,17 @@ class MergeCache:
             self.misses += 1
         else:
             self.hits += 1
+            self._store.move_to_end(key)
         return got
 
     def put(self, key: Tuple, op_blocks: List[List[int]]) -> None:
-        if len(self._store) >= self.capacity:
-            self._store.pop(next(iter(self._store)))   # FIFO eviction
+        if key in self._store:
+            self._store.move_to_end(key)
+        elif len(self._store) >= self.capacity:
+            self._store.popitem(last=False)   # evict least-recently-used
+            self.evictions += 1
         self._store[key] = [list(b) for b in op_blocks]
 
     def clear(self) -> None:
         self._store.clear()
-        self.hits = self.misses = 0
+        self.hits = self.misses = self.evictions = 0

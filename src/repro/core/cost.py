@@ -29,6 +29,13 @@ KERNEL_LAUNCH_S = 2e-6    # per-dispatch overhead (XLA executable launch)
 class CostModel:
     name: str = "abstract"
     unit: str = "elements"
+    # True when merge_saving(b1, b2) can only be non-zero if the blocks
+    # structurally interact (shared identical views, creator/reader,
+    # writer/deleter, creator/deleter pairs).  Lets PartitionState build its
+    # weight graph from those support pairs instead of all V² pairs
+    # (DESIGN.md §5).  Models with a per-block constant term (launch
+    # overhead, block count) reward merging ANY pair and must stay dense.
+    sparse_weights: bool = False
 
     def prepare(self, ops: Sequence[Op]) -> None:   # optional precompute
         pass
@@ -50,6 +57,8 @@ class BohriumCost(CostModel):
     ``unit='elements'`` reproduces the paper's figures (Fig. 3 cost 94);
     ``unit='bytes'`` is the same model scaled by dtype itemsize.
     """
+
+    sparse_weights = True
 
     def __init__(self, unit: str = "elements"):
         self.unit = unit
@@ -81,6 +90,8 @@ def closed_form_saving(b1: BlockInfo, b2: BlockInfo, unit: str = "elements") -> 
 class MaxContractCost(CostModel):
     """Def. 19: arrays NOT contracted each cost 1."""
 
+    sparse_weights = True
+
     def __init__(self):
         self.name = "max_contract"
         self._total_new = 0
@@ -98,6 +109,8 @@ class MaxContractCost(CostModel):
 class MaxLocalityCost(CostModel):
     """Def. 20: each unordered pair of identical array accesses in different
     blocks costs 1 (fusing four identical accesses saves C(4,2)=6)."""
+
+    sparse_weights = True
 
     def __init__(self):
         self.name = "max_locality"

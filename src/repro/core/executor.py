@@ -70,6 +70,19 @@ def _write(buf, v: View, val):
     return buf.at[idx].set(val.reshape(-1))
 
 
+def block_dead_bases(ops: Sequence[Op]) -> set:
+    """Bases destroyed inside a block and not SYNC'd: no later block (or the
+    host) may observe them.  The single definition of the del−sync rule,
+    shared by ``block_io`` and the scheduler's donation analysis."""
+    deleted, synced = set(), set()
+    for op in ops:
+        for b in op.del_bases:
+            deleted.add(b.uid)
+        for b in op.sync_bases:
+            synced.add(b.uid)
+    return deleted - synced
+
+
 def block_io(ops: Sequence[Op]) -> Tuple[List[int], List[int], List[int]]:
     """(input base uids, output base uids, contracted base uids) of a block.
 
@@ -78,7 +91,7 @@ def block_io(ops: Sequence[Op]) -> Tuple[List[int], List[int], List[int]]:
     contracted = new∩del — never materialized outside the block (the paper's
     array contraction; these become XLA temporaries / Pallas VMEM scratch).
     """
-    new, deleted, synced, read, written = set(), set(), set(), set(), set()
+    new, read, written = set(), set(), set()
     inputs: List[int] = []
     order: List[int] = []
     for op in ops:
@@ -100,11 +113,7 @@ def block_io(ops: Sequence[Op]) -> Tuple[List[int], List[int], List[int]]:
             written.add(u)
             if u not in order:
                 order.append(u)
-        for b in op.del_bases:
-            deleted.add(b.uid)
-        for b in op.sync_bases:
-            synced.add(b.uid)
-    dead = deleted - synced     # SYNC'd bases stay observable
+    dead = block_dead_bases(ops)     # SYNC'd bases stay observable
     contracted = [u for u in order if u in new and u in dead]
     outputs = [u for u in order if u in written and u not in dead]
     return inputs, outputs, contracted
@@ -201,66 +210,102 @@ def block_signature(ops: Sequence[Op]) -> Tuple:
 
 
 class BlockExecutor:
-    """Executes a partitioned tape against a buffer store, caching compiled
-    block executables across flushes (the runtime-JIT part of §IV-F)."""
+    """Stage 5 of the scheduler pipeline: executes a ``Schedule`` against a
+    buffer store, caching compiled block executables across flushes (the
+    runtime-JIT part of §IV-F).
+
+    Dispatch is asynchronous: nothing in the block loop forces a host sync,
+    so block k+1 is enqueued while block k still runs on device; results
+    only materialize at an explicit SYNC (``Runtime.materialize``).  When
+    the backend supports buffer donation (GPU/TPU), inputs whose base dies
+    inside the block are passed through ``jax.jit(donate_argnums=...)`` so
+    XLA reuses their memory for the block's outputs."""
 
     def __init__(self, seed: int = 0, jit: bool = True,
-                 backend: str = "xla"):
+                 backend: str = "xla", donate="auto"):
         """backend='pallas' lowers fusible elementwise blocks through the
         Pallas fused_block kernel generator (interpret mode on CPU; compiled
-        on TPU) with automatic XLA fallback for unsupported blocks."""
+        on TPU) with automatic XLA fallback for unsupported blocks.
+        donate='auto' enables input donation on backends that implement it
+        (GPU/TPU); True forces it, False disables it."""
         self.seed = seed
         self.jit = jit
         self.backend = backend
+        self.donate = donate
         self._cache: Dict[Tuple, Tuple] = {}
+        self._empty_salts = None
         self.sync_store: Dict[int, jnp.ndarray] = {}
         self.stats = {"blocks_run": 0, "exec_cache_hits": 0,
-                      "exec_cache_misses": 0, "pallas_blocks": 0}
+                      "exec_cache_misses": 0, "pallas_blocks": 0,
+                      "donated_buffers": 0}
+
+    def donation_enabled(self) -> bool:
+        if self.donate == "auto":
+            return jax.default_backend() in ("gpu", "tpu", "cuda", "rocm")
+        return bool(self.donate)
 
     def run(self, tape: Sequence[Op], op_blocks: Sequence[Sequence[int]],
             buffers: Dict[int, jnp.ndarray]) -> None:
-        for block in op_blocks:
-            ops = [tape[i] for i in block]
-            work = [op for op in ops if not op.is_system()]
-            if work:
-                sig = block_signature(ops)
-                fn = self._cache.get(sig)
-                # ins/outs are uid lists of THIS block; the canonical
-                # signature guarantees positional correspondence with the
-                # cached executable, but the uids themselves differ.
-                ins, outs, _ = block_io(ops)
-                if fn is None:
-                    used_pallas = False
-                    if self.backend == "pallas":
-                        from ..kernels.fused_block.ops import fused_block_fn
-                        pfn, fins, fouts, used_pallas = fused_block_fn(ops)
-                        if used_pallas:
-                            # kernel path takes no RNG salts (elementwise
-                            # blocks never contain random ops)
-                            fn = lambda *a: pfn(*a[:-1])      # noqa: E731
-                            self.stats["pallas_blocks"] += 1
-                    if not used_pallas:
-                        fn, fins, fouts = make_block_fn(ops, seed=self.seed)
-                        if self.jit:
-                            fn = jax.jit(fn)
-                    assert fins == ins and fouts == outs
-                    self._cache[sig] = fn
+        """Legacy front door: plan the blocks, then execute the schedule."""
+        from .scheduler import Schedule, plan_blocks   # local: avoid cycle
+        self.run_schedule(Schedule(tape=list(tape),
+                                   blocks=plan_blocks(tape, op_blocks)),
+                          buffers)
+
+    def _compile(self, ops: Sequence[Op], plan) -> Tuple:
+        """Build (and jit) the executable for one block plan.  Returns
+        ``(fn, donates)`` — ``donates`` records whether the executable was
+        compiled with ``donate_argnums`` (feeds the per-run stat)."""
+        if self.backend == "pallas":
+            from ..kernels.fused_block.ops import fused_block_fn
+            pfn, fins, fouts, used_pallas = fused_block_fn(ops)
+            if used_pallas:
+                # kernel path takes no RNG salts (elementwise blocks never
+                # contain random ops)
+                assert tuple(fins) == plan.inputs and tuple(fouts) == plan.outputs
+                self.stats["pallas_blocks"] += 1
+                return (lambda *a: pfn(*a[:-1])), False
+        fn, fins, fouts = make_block_fn(ops, seed=self.seed)
+        assert tuple(fins) == plan.inputs and tuple(fouts) == plan.outputs
+        donate = plan.donatable if self.jit and self.donation_enabled() else ()
+        if self.jit:
+            fn = jax.jit(fn, donate_argnums=donate)
+        return fn, bool(donate)
+
+    def run_schedule(self, schedule, buffers: Dict[int, jnp.ndarray]) -> None:
+        tape = schedule.tape
+        if self._empty_salts is None:
+            self._empty_salts = jnp.zeros((0,), dtype=jnp.int32)
+        for plan in schedule.blocks:
+            ops = [tape[i] for i in plan.op_indices]
+            if plan.has_work:
+                cached = self._cache.get(plan.signature)
+                # plan inputs/outputs are uid lists of THIS flush; the
+                # canonical signature guarantees positional correspondence
+                # with the cached executable across flushes.
+                if cached is None:
+                    fn, donates = self._compile(ops, plan)
+                    self._cache[plan.signature] = (fn, donates)
                     self.stats["exec_cache_misses"] += 1
                 else:
+                    fn, donates = cached
                     self.stats["exec_cache_hits"] += 1
                 in_bufs = []
-                for u in ins:
+                for u in plan.inputs:
                     if u not in buffers:
                         raise RuntimeError(f"base {u} read before definition")
                     in_bufs.append(buffers[u])
-                salts = jnp.asarray(
-                    [getattr(op, "salt", op.uid) % (2**31 - 1)
-                     for op in work if op.opcode == "random"],
-                    dtype=jnp.int32)
+                salt_list = [getattr(op, "salt", op.uid) % (2**31 - 1)
+                             for op in ops
+                             if not op.is_system() and op.opcode == "random"]
+                salts = (jnp.asarray(salt_list, dtype=jnp.int32)
+                         if salt_list else self._empty_salts)
                 out_bufs = fn(*in_bufs, salts)
-                for u, b in zip(outs, out_bufs):
+                for u, b in zip(plan.outputs, out_bufs):
                     buffers[u] = b
                 self.stats["blocks_run"] += 1
+                if donates:
+                    self.stats["donated_buffers"] += len(plan.donatable)
             for op in ops:   # SYNC snapshots before DEL frees (Bohrium order)
                 for b in op.sync_bases:
                     if b.uid in buffers:

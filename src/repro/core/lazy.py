@@ -23,28 +23,33 @@ import numpy as np
 # and is unaffected).
 jax.config.update("jax_enable_x64", True)
 
-from .algorithms import PartitionResult, partition
-from .cache import MergeCache, tape_signature
+from .algorithms import PartitionResult
+from .cache import MergeCache
 from .executor import BlockExecutor
 from .ir import BaseArray, Op, View
+from .scheduler import Scheduler
 
 Scalar = Union[int, float, bool]
 
 
 class Runtime:
-    """Owns the tape, the buffer store, the merge cache and the policy."""
+    """Owns the tape (stage 1 of the scheduler pipeline: trace), the buffer
+    store, the staged scheduler (stages 2–4) and the executor (stage 5)."""
 
     def __init__(self, algorithm: str = "greedy", cost_model: str = "bohrium",
                  use_cache: bool = True, node_budget: int = 100_000,
-                 seed: int = 0, jit: bool = True, backend: str = "xla"):
+                 seed: int = 0, jit: bool = True, backend: str = "xla",
+                 donate="auto"):
         self.algorithm = algorithm
         self.cost_model = cost_model
         self.use_cache = use_cache
         self.node_budget = node_budget
         self.tape: List[Op] = []
         self.buffers: Dict[int, jnp.ndarray] = {}
-        self.cache = MergeCache()
-        self.executor = BlockExecutor(seed=seed, jit=jit, backend=backend)
+        self.scheduler = Scheduler(MergeCache())
+        self.cache = self.scheduler.cache
+        self.executor = BlockExecutor(seed=seed, jit=jit, backend=backend,
+                                      donate=donate)
         self._known: set = set()
         self._refcount: Dict[int, int] = {}
         self._bases: Dict[int, BaseArray] = {}
@@ -86,27 +91,28 @@ class Runtime:
 
     # -- flushing ------------------------------------------------------
     def flush(self) -> None:
+        """Run the staged pipeline on the recorded tape: the scheduler plans
+        (graph → partition → schedule, with the merge cache short-circuiting
+        the first two), then the executor dispatches the block plans."""
         if not self.tape or self._flushing:
             return
         self._flushing = True
         try:
             tape, self.tape = self.tape, []
-            key = tape_signature(tape, self.algorithm, self.cost_model)
-            blocks = self.cache.get(key) if self.use_cache else None
-            if blocks is None:
-                res = partition(tape, algorithm=self.algorithm,
-                                cost_model=self.cost_model,
-                                node_budget=self.node_budget)
-                blocks = res.op_blocks()
-                self.last_partition = res
-                if self.use_cache:
-                    self.cache.put(key, blocks)
-                self.history.append({"cost": res.cost, "n_ops": len(tape),
-                                     "n_blocks": res.n_blocks,
-                                     "cached": False, **res.stats})
+            sched = self.scheduler.plan(tape, algorithm=self.algorithm,
+                                        cost_model=self.cost_model,
+                                        node_budget=self.node_budget,
+                                        use_cache=self.use_cache)
+            if sched.result is not None:
+                self.last_partition = sched.result
+                self.history.append({"cost": sched.result.cost,
+                                     "n_ops": len(tape),
+                                     "n_blocks": sched.result.n_blocks,
+                                     "cached": False, **sched.stats})
             else:
-                self.history.append({"n_ops": len(tape), "cached": True})
-            self.executor.run(tape, blocks, self.buffers)
+                self.history.append({"n_ops": len(tape), "cached": True,
+                                     **sched.stats})
+            self.executor.run_schedule(sched, self.buffers)
             self._known = set()
             self.flushes += 1
         finally:
@@ -459,7 +465,11 @@ def minimum(a: LazyArray, b, out: Optional[LazyArray] = None) -> LazyArray:
 
 
 def where(cond: LazyArray, a, b) -> LazyArray:
-    out = _alloc(cond.rt, cond.shape, np.float64)
+    def _dt(x):
+        if isinstance(x, (LazyArray, np.ndarray)):
+            return x.dtype
+        return np.result_type(x)          # python scalar -> its numpy dtype
+    out = _alloc(cond.rt, cond.shape, np.result_type(_dt(a), _dt(b)))
     _record_elementwise(cond.rt, "where", out.view,
                         (cond.view, cond._coerce(a, cond.shape),
                          cond._coerce(b, cond.shape)))

@@ -1,0 +1,118 @@
+"""Staged scheduler pipeline: trace → graph → partition → schedule → execute.
+
+This module is the explicit spine of the runtime (DESIGN.md §7).  The five
+stages and their owners:
+
+1. **trace**     — ``repro.core.lazy.Runtime`` records array bytecode.
+2. **graph**     — ``fusion.build_graph`` builds the WSP instance
+   (base-indexed, near-linear on real tapes).
+3. **partition** — ``algorithms.partition`` contracts the graph into fusion
+   blocks under a cost model.
+4. **schedule**  — this module turns the block list into a ``Schedule``: a
+   topologically-ordered sequence of ``BlockPlan``s carrying each block's
+   external inputs/outputs, contracted temporaries, executable-cache
+   signature and *donatable* input positions (buffers whose base dies
+   inside the block and can be donated to XLA for in-place reuse).
+5. **execute**   — ``executor.BlockExecutor.run_schedule`` dispatches the
+   plans asynchronously against the buffer store.
+
+The ``Schedule`` object is the seam between the partitioner and the
+executor: later sharding / multi-backend work plugs in here (a distributed
+executor consumes the same plans; a sharded scheduler would annotate them).
+
+Stage 3 is skipped on a merge-cache hit (§IV-F): the cache maps a canonical
+tape signature to the block structure, so iterative programs pay the
+partition cost once and only re-run the cheap linear schedule stage.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .algorithms import PartitionResult, partition
+from .cache import MergeCache, tape_signature
+from .executor import block_dead_bases, block_io, block_signature
+from .ir import Op
+
+
+@dataclass(frozen=True)
+class BlockPlan:
+    """Everything the executor needs to dispatch one fusion block."""
+
+    op_indices: Tuple[int, ...]    # tape positions, program order
+    inputs: Tuple[int, ...]        # base uids consumed from the store
+    outputs: Tuple[int, ...]       # base uids written back to the store
+    contracted: Tuple[int, ...]    # new∩del temporaries (never materialized)
+    donatable: Tuple[int, ...]     # positions in `inputs` whose buffer dies
+    signature: Tuple               # executable-cache key (structural)
+    has_work: bool                 # False for DEL/SYNC-only blocks
+
+
+@dataclass
+class Schedule:
+    """A fully-planned flush: the tape plus its ordered block plans."""
+
+    tape: List[Op]
+    blocks: List[BlockPlan]
+    result: Optional[PartitionResult] = None   # None on a merge-cache hit
+    stats: Dict[str, float] = field(default_factory=dict)
+
+
+def plan_blocks(tape: Sequence[Op],
+                op_blocks: Sequence[Sequence[int]]) -> List[BlockPlan]:
+    """Stage 4: lower a partition's block lists into ``BlockPlan``s.
+
+    A block input is donatable when its base is deleted (and not SYNC'd)
+    inside the same block: no later block may observe it — the partition's
+    dependency edges order every access before the DEL — so its device
+    buffer can be handed to XLA for output aliasing."""
+    plans: List[BlockPlan] = []
+    for block in op_blocks:
+        ops = [tape[i] for i in block]
+        ins, outs, contracted = block_io(ops)
+        dead = block_dead_bases(ops)
+        donatable = tuple(k for k, u in enumerate(ins) if u in dead)
+        plans.append(BlockPlan(
+            op_indices=tuple(block),
+            inputs=tuple(ins),
+            outputs=tuple(outs),
+            contracted=tuple(contracted),
+            donatable=donatable,
+            signature=block_signature(ops),
+            has_work=any(not op.is_system() for op in ops),
+        ))
+    return plans
+
+
+class Scheduler:
+    """Owns stages 2–4 and the merge cache; policy arrives per call so the
+    Runtime can retarget algorithm/cost model between flushes."""
+
+    def __init__(self, cache: Optional[MergeCache] = None):
+        self.cache = cache if cache is not None else MergeCache()
+
+    def plan(self, tape: Sequence[Op], *, algorithm: str = "greedy",
+             cost_model: str = "bohrium", node_budget: int = 100_000,
+             use_cache: bool = True) -> Schedule:
+        stats: Dict[str, float] = {}
+        blocks: Optional[List[List[int]]] = None
+        key: Optional[Tuple] = None
+        if use_cache:
+            key = tape_signature(tape, algorithm, cost_model)
+            blocks = self.cache.get(key)
+        result = None
+        if blocks is None:
+            result = partition(tape, algorithm=algorithm,
+                               cost_model=cost_model,
+                               node_budget=node_budget)
+            blocks = result.op_blocks()
+            if use_cache:
+                self.cache.put(key, blocks)
+            stats.update(result.stats)
+        t0 = time.perf_counter()
+        plans = plan_blocks(tape, blocks)
+        stats["t_schedule_s"] = time.perf_counter() - t0
+        return Schedule(tape=list(tape), blocks=plans, result=result,
+                        stats=stats)

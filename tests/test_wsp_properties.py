@@ -13,6 +13,9 @@ Invariants under test (paper references in brackets):
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (BohriumCost, build_graph, closed_form_saving,
