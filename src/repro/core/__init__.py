@@ -1,16 +1,19 @@
 # The paper's primary contribution: runtime fusion of array operations via
 # Weighted Subroutine Partition (WSP) graph partitioning, as a composable
 # JAX module.  See DESIGN.md section 2 for the layer map.
-from .ir import BaseArray, Op, View                              # noqa: F401
+from .ir import BaseArray, COMM_OPS, Op, View                    # noqa: F401
 from .fusion import (WSPGraph, build_graph,                      # noqa: F401
                      build_graph_reference, fusible, depends)
 from .blocks import BlockInfo                                    # noqa: F401
-from .cost import (BohriumCost, CostModel, MaxContractCost,      # noqa: F401
-                   MaxLocalityCost, RobinsonCost, TPUCost,
-                   TPUDistCost, make_cost_model, closed_form_saving)
+from .cost import (BohriumCost, CommCost, CostModel,             # noqa: F401
+                   MaxContractCost, MaxLocalityCost, RobinsonCost,
+                   TPUCost, TPUDistCost, make_cost_model,
+                   closed_form_saving)
 from .partition import PartitionState                            # noqa: F401
 from .algorithms import PartitionResult, partition               # noqa: F401
 from .cache import MergeCache, tape_signature                    # noqa: F401
 from .executor import BlockExecutor, make_block_fn, block_io     # noqa: F401
 from .scheduler import BlockPlan, Schedule, Scheduler, plan_blocks  # noqa: F401
+from .dist import (DistBlockExecutor, ShardSpec,                 # noqa: F401
+                   insert_resharding, host_mesh)
 from . import lazy                                               # noqa: F401

@@ -14,8 +14,24 @@ from .executor import block_signature
 from .ir import Op
 
 
-def tape_signature(tape: Sequence[Op], algorithm: str, cost_model: str) -> Tuple:
-    return (algorithm, cost_model, block_signature(tape))
+def _shard_digest(tape: Sequence[Op]) -> Tuple:
+    """Placement of every base on the tape (``dist.spec.placement_digest``).
+    Distributed plans are placement-dependent: the comm cost model prices
+    shard counts and the resharding pass shapes the tape around them, so two
+    structurally-equal tapes with different ShardSpecs must never share a
+    cache entry."""
+    from .dist.spec import placement_digest   # local: cache loads pre-dist
+    return placement_digest(tape)
+
+
+def tape_signature(tape: Sequence[Op], algorithm: str, cost_model: str,
+                   topology: Tuple = ()) -> Tuple:
+    """Canonical merge-cache key.  ``topology`` is the executor's device/mesh
+    identity (``dist.mesh.topology_key``): a partition computed under one
+    device count must never be replayed under another once plans become
+    placement-dependent."""
+    return (algorithm, cost_model, tuple(topology), _shard_digest(tape),
+            block_signature(tape))
 
 
 class MergeCache:

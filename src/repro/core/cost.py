@@ -307,8 +307,53 @@ class TPUFMACost(TPUCost):
         return total + self.FMA_BONUS_S * n_ops
 
 
+class CommCost(CostModel):
+    """Communication-aware WSP over the sharded IR (core/dist): the paper's
+    fusion criterion "shape compatibility, data reusability AND
+    communication", priced on explicit COMM graph nodes.
+
+    A block costs its per-device HBM traffic time (ext bytes divided by the
+    shard count of each base's placement) plus its interconnect time: the
+    fabric bytes of the block's *unique* collectives (``comm_op_bytes``,
+    deduplicated on ``(kind, source view, target placement)``).  The
+    resharding pass inserts one COMM per consuming read site, so merging
+    identical reshards deduplicates collectives — the model's
+    ``merge_saving`` prices exactly the interconnect bytes that fusion
+    elides, alongside the usual HBM dedup/contraction savings.
+
+    Monotone: merging only deduplicates ext views, contracts temporaries and
+    deduplicates collectives — every term shrinks.  Sparse: a non-zero
+    saving needs a shared identical view key (incl. the COMM dedup case) or
+    a creator/reader/writer/deleter pair, so the saving-support weight graph
+    of ``PartitionState`` applies (DESIGN.md §5).
+    """
+
+    sparse_weights = True
+
+    def __init__(self, hbm_bw: float = HBM_BW, ici_bw: float = ICI_BW):
+        self.name = "comm"
+        self.unit = "bytes"
+        self.hbm_bw = hbm_bw
+        self.ici_bw = ici_bw
+
+    @staticmethod
+    def _local_nbytes(v: View) -> float:
+        from .dist.spec import spec_of
+        spec = spec_of(v.base)
+        return v.nbytes / (spec.n_shards if spec is not None else 1)
+
+    def block_cost(self, b: BlockInfo) -> float:
+        if all(o.is_system() for o in b.ops):
+            return 0.0
+        from .dist.reshard import block_comm_bytes
+        reads, writes = b.ext_views()
+        hbm = sum(self._local_nbytes(v) for v in (*reads, *writes))
+        return hbm / self.hbm_bw + block_comm_bytes(b.ops) / self.ici_bw
+
+
 _MODELS = {
     "bohrium": BohriumCost,
+    "comm": CommCost,
     "max_contract": MaxContractCost,
     "max_locality": MaxLocalityCost,
     "robinson": RobinsonCost,

@@ -1,0 +1,39 @@
+"""Device-mesh helpers for the distributed executor.
+
+A host mesh is a 1-D ``jax.sharding.Mesh`` over the process's devices (on
+CPU, multiply them with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+— the same trick the distribution-layer tests use).  ``topology_key``
+canonicalizes a mesh into the hashable tuple that the merge cache mixes into
+``tape_signature`` so plans computed under one device count are never
+replayed under another.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+DEFAULT_AXIS = "dev"
+
+
+def host_mesh(n: Optional[int] = None, axis: str = DEFAULT_AXIS) -> Mesh:
+    """A 1-D mesh over the first ``n`` local devices (all by default)."""
+    devs = jax.devices()
+    if n is None:
+        n = len(devs)
+    if n > len(devs):
+        raise ValueError(f"asked for {n} devices, have {len(devs)} "
+                         f"(set --xla_force_host_platform_device_count)")
+    return Mesh(np.array(devs[:n]), (axis,))
+
+
+def topology_key(mesh: Optional[Mesh]) -> Tuple:
+    """Hashable mesh identity: axis names/sizes plus the device platform."""
+    if mesh is None:
+        return ()
+    axes = tuple((str(name), int(size))
+                 for name, size in zip(mesh.axis_names, mesh.devices.shape))
+    return axes + (str(mesh.devices.flat[0].platform),)

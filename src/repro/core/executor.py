@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ir import ELEMENTWISE, REDUCTIONS, Op, View
+from .ir import COMM_OPS, ELEMENTWISE, REDUCTIONS, Op, View
 
 _UNARY = {
     "copy": lambda x: x, "sqrt": jnp.sqrt, "exp": jnp.exp, "log": jnp.log,
@@ -55,19 +55,79 @@ def _view_index(v: View) -> Optional[np.ndarray]:
     return idx.reshape(-1).astype(np.int32)
 
 
+def _slice_plan(v: View) -> Optional[Tuple[Tuple[int, ...], Tuple[int, ...],
+                                           Tuple[int, ...]]]:
+    """Lower a regularly-strided view to one static slice: returns
+    ``(dims, starts, sizes)`` such that reshaping the flat base to ``dims``
+    and slicing ``starts:starts+sizes`` yields the view's elements (in view
+    order), or None when the strides are not a nested row-major pattern.
+
+    This keeps the O(size) gather-index constants of ``_view_index`` out of
+    block jaxprs for the common single-slice case (slices, shifted stencil
+    windows, strided 1-D subsampling): XLA sees ``reshape + slice`` instead
+    of a materialized int32 index array.
+    """
+    if v.size == 0:
+        return None
+    # drop size-1 dims (their strides are arbitrary); remember nothing —
+    # callers reshape to v.shape at the end anyway.
+    sh = [s for s, st in zip(v.shape, v.strides) if s != 1]
+    st = [st for s, st in zip(v.shape, v.strides) if s != 1]
+    if any(s <= 0 for s in st):
+        return None                       # broadcast / reversed: gather path
+    if st and st[-1] != 1:                # strided innermost dim: view the
+        sh.append(1)                      # base as (..., step) and take one
+        st.append(1)                      # column of it
+    dims: List[int] = []
+    for i in range(len(st) - 1, 0, -1):
+        if st[i - 1] % st[i]:
+            return None
+        d = st[i - 1] // st[i]
+        if d < sh[i]:
+            return None                   # rows would overlap/wrap
+        dims.append(d)
+    if not st:
+        sh, st = [1], [1]
+        dims.append(v.base.size)
+    else:
+        if v.base.size % st[0]:
+            return None
+        dims.append(v.base.size // st[0])
+    dims.reverse()
+    starts, rem = [], v.offset
+    for d, s in zip(dims, st):            # st are the row-major strides of
+        starts.append(rem // s)           # dims by construction
+        rem -= starts[-1] * s
+    if rem:
+        return None
+    if any(a + n > d for a, d, n in zip(starts, dims, sh)):
+        return None
+    return tuple(dims), tuple(starts), tuple(sh)
+
+
 def _read(buf, v: View):
-    idx = _view_index(v)
-    if idx is None:
+    if v.offset == 0 and v.size == v.base.size and v.is_contiguous():
         return buf.reshape(v.shape)
-    return buf[idx].reshape(v.shape)
+    plan = _slice_plan(v)
+    if plan is not None:
+        dims, starts, sizes = plan
+        sub = jax.lax.slice(buf.reshape(dims), starts,
+                            tuple(a + n for a, n in zip(starts, sizes)))
+        return sub.reshape(v.shape)
+    return buf[_view_index(v)].reshape(v.shape)
 
 
 def _write(buf, v: View, val):
     val = jnp.broadcast_to(jnp.asarray(val, buf.dtype), v.shape)
-    idx = _view_index(v)
-    if idx is None:
+    if v.offset == 0 and v.size == v.base.size and v.is_contiguous():
         return val.reshape(-1)
-    return buf.at[idx].set(val.reshape(-1))
+    plan = _slice_plan(v)
+    if plan is not None:
+        dims, starts, sizes = plan
+        window = tuple(slice(a, a + n) for a, n in zip(starts, sizes))
+        out = buf.reshape(dims).at[window].set(val.reshape(sizes))
+        return out.reshape(-1)
+    return buf.at[_view_index(v)].set(val.reshape(-1))
 
 
 def block_dead_bases(ops: Sequence[Op]) -> set:
@@ -153,6 +213,10 @@ def make_block_fn(ops: Sequence[Op], seed: int = 0):
             oc = op.opcode
             if oc in _UNARY:
                 val = _UNARY[oc](*ins)
+            elif oc in COMM_OPS:
+                # single-device semantics of a placement cast: identity —
+                # only the DistBlockExecutor lowers these to collectives
+                val = ins[0]
             elif oc in _BINARY:
                 val = _BINARY[oc](*ins)
             elif oc == "where":
@@ -244,6 +308,14 @@ class BlockExecutor:
             return jax.default_backend() in ("gpu", "tpu", "cuda", "rocm")
         return bool(self.donate)
 
+    # -- subclass seams (DistBlockExecutor) ----------------------------
+    def _cache_key(self, ops: Sequence[Op], plan) -> Tuple:
+        """Executable-cache key for one plan; subclasses fold in placement."""
+        return plan.signature
+
+    def _post_block(self, ops: Sequence[Op], plan) -> None:
+        """Per-dispatch accounting hook (no-op on the single-device path)."""
+
     def run(self, tape: Sequence[Op], op_blocks: Sequence[Sequence[int]],
             buffers: Dict[int, jnp.ndarray]) -> None:
         """Legacy front door: plan the blocks, then execute the schedule."""
@@ -279,13 +351,14 @@ class BlockExecutor:
         for plan in schedule.blocks:
             ops = [tape[i] for i in plan.op_indices]
             if plan.has_work:
-                cached = self._cache.get(plan.signature)
+                key = self._cache_key(ops, plan)
+                cached = self._cache.get(key)
                 # plan inputs/outputs are uid lists of THIS flush; the
                 # canonical signature guarantees positional correspondence
                 # with the cached executable across flushes.
                 if cached is None:
                     fn, donates = self._compile(ops, plan)
-                    self._cache[plan.signature] = (fn, donates)
+                    self._cache[key] = (fn, donates)
                     self.stats["exec_cache_misses"] += 1
                 else:
                     fn, donates = cached
@@ -306,6 +379,7 @@ class BlockExecutor:
                 self.stats["blocks_run"] += 1
                 if donates:
                     self.stats["donated_buffers"] += len(plan.donatable)
+                self._post_block(ops, plan)
             for op in ops:   # SYNC snapshots before DEL frees (Bohrium order)
                 for b in op.sync_bases:
                     if b.uid in buffers:

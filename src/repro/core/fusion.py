@@ -20,11 +20,11 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Set, Tuple
 
-from .ir import ELEMENTWISE, REDUCTIONS, Op, View
+from .ir import COMM_OPS, ELEMENTWISE, REDUCTIONS, Op, View
 
 # opcodes that are data-parallel over a regular iteration domain and may share
 # a fused kernel with other such ops (reductions fuse on their sweep domain).
-FUSIBLE_OPCODES = set(ELEMENTWISE) | REDUCTIONS | {"random", "range"}
+FUSIBLE_OPCODES = set(ELEMENTWISE) | REDUCTIONS | {"random", "range"} | COMM_OPS
 # opcodes that never share a block with a non-system op (irregular access).
 OPAQUE_OPCODES = {"matmul", "gather"}
 
@@ -60,6 +60,12 @@ def fusible(f: Op, g: Op) -> bool:
     if f.is_system() or g.is_system():
         return True
     if f.opcode in OPAQUE_OPCODES or g.opcode in OPAQUE_OPCODES:
+        return False
+    # COMM boundary (core/dist): a collective never shares a kernel with
+    # compute — it marks a placement change the executor must realize at a
+    # block edge.  COMM ops DO fuse with each other (identical reshards of
+    # one base merge into a single collective — communication elision).
+    if (f.opcode in COMM_OPS) != (g.opcode in COMM_OPS):
         return False
     # Bohrium: equal length and dimensionality of the iteration domain.
     if f.domain != g.domain:
@@ -168,8 +174,12 @@ def build_graph(ops: List[Op]) -> WSPGraph:
     in_ops: Dict[int, Set[int]] = {}       # base uid -> ops with an in-view
     out_ops: Dict[int, Set[int]] = {}      # base uid -> ops with an out-view
     opaque_ops: List[int] = []
-    domain_ops: Dict[Tuple[int, ...], List[int]] = {}   # non-opaque only
-    n_nonsystem = 0
+    comm_ops: List[int] = []
+    # per-class domain buckets: COMM ops never fuse with compute, so their
+    # same-domain candidate sets are tracked separately from compute ops.
+    domain_ops: Dict[Tuple[int, ...], List[int]] = {}        # compute
+    comm_domain_ops: Dict[Tuple[int, ...], List[int]] = {}   # comm
+    n_compute = 0
 
     for j in range(n):
         opj = ops[j]
@@ -192,10 +202,11 @@ def build_graph(ops: List[Op]) -> WSPGraph:
             forb = g.fuse_forbidden[j]
             if opj.opcode in OPAQUE_OPCODES:
                 # (a) opaque: forbidden with every earlier non-system op
-                for d_ops in domain_ops.values():
-                    for i in d_ops:
-                        forb.add(i)
-                        g.fuse_forbidden[i].add(j)
+                for bucket in (domain_ops, comm_domain_ops):
+                    for d_ops in bucket.values():
+                        for i in d_ops:
+                            forb.add(i)
+                            g.fuse_forbidden[i].add(j)
                 for i in opaque_ops:
                     forb.add(i)
                     g.fuse_forbidden[i].add(j)
@@ -204,10 +215,23 @@ def build_graph(ops: List[Op]) -> WSPGraph:
                 for i in opaque_ops:                   # (a) mirrored
                     forb.add(i)
                     g.fuse_forbidden[i].add(j)
+                is_comm = opj.opcode in COMM_OPS
+                if is_comm:
+                    # (a') COMM boundary: forbidden with every compute op
+                    for d_ops in domain_ops.values():
+                        for i in d_ops:
+                            forb.add(i)
+                            g.fuse_forbidden[i].add(j)
+                    my_domains, n_same_class = comm_domain_ops, len(comm_ops)
+                else:
+                    for i in comm_ops:                 # (a') mirrored
+                        forb.add(i)
+                        g.fuse_forbidden[i].add(j)
+                    my_domains, n_same_class = domain_ops, n_compute
                 dom = opj.domain
-                same = domain_ops.get(dom)
-                if len(same or ()) < n_nonsystem - len(opaque_ops):
-                    for d, d_ops in domain_ops.items():  # (b) domain mismatch
+                same = my_domains.get(dom)
+                if len(same or ()) < n_same_class:
+                    for d, d_ops in my_domains.items():  # (b) domain mismatch
                         if d != dom:
                             for i in d_ops:
                                 forb.add(i)
@@ -225,14 +249,17 @@ def build_graph(ops: List[Op]) -> WSPGraph:
                         forb.add(i)
                         g.fuse_forbidden[i].add(j)
                 if same is None:
-                    domain_ops[dom] = [j]
+                    my_domains[dom] = [j]
                 else:
                     same.append(j)
                 for v in opj.in_views():
                     in_ops.setdefault(v.base.uid, set()).add(j)
                 for v in opj.out_views():
                     out_ops.setdefault(v.base.uid, set()).add(j)
-            n_nonsystem += 1
+                if is_comm:
+                    comm_ops.append(j)
+                else:
+                    n_compute += 1
 
         for v in jr:
             dep_readers.setdefault(v.base.uid, set()).add(j)

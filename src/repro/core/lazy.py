@@ -39,7 +39,7 @@ class Runtime:
     def __init__(self, algorithm: str = "greedy", cost_model: str = "bohrium",
                  use_cache: bool = True, node_budget: int = 100_000,
                  seed: int = 0, jit: bool = True, backend: str = "xla",
-                 donate="auto"):
+                 donate="auto", mesh=None):
         self.algorithm = algorithm
         self.cost_model = cost_model
         self.use_cache = use_cache
@@ -48,8 +48,14 @@ class Runtime:
         self.buffers: Dict[int, jnp.ndarray] = {}
         self.scheduler = Scheduler(MergeCache())
         self.cache = self.scheduler.cache
-        self.executor = BlockExecutor(seed=seed, jit=jit, backend=backend,
-                                      donate=donate)
+        if mesh is not None:
+            # distributed stage 5: same plans, shard_map lowering
+            from .dist import DistBlockExecutor
+            self.executor = DistBlockExecutor(mesh=mesh, seed=seed, jit=jit,
+                                              backend=backend, donate=donate)
+        else:
+            self.executor = BlockExecutor(seed=seed, jit=jit, backend=backend,
+                                          donate=donate)
         self._known: set = set()
         self._refcount: Dict[int, int] = {}
         self._bases: Dict[int, BaseArray] = {}
@@ -99,10 +105,17 @@ class Runtime:
         self._flushing = True
         try:
             tape, self.tape = self.tape, []
+            from .dist import insert_resharding, tape_has_sharding
+            if tape_has_sharding(tape):
+                # placement disagreements become explicit COMM graph nodes
+                # BEFORE partitioning, so WSP prices interconnect traffic
+                tape = insert_resharding(tape)
+            topo_fn = getattr(self.executor, "topology_key", None)
             sched = self.scheduler.plan(tape, algorithm=self.algorithm,
                                         cost_model=self.cost_model,
                                         node_budget=self.node_budget,
-                                        use_cache=self.use_cache)
+                                        use_cache=self.use_cache,
+                                        topology=topo_fn() if topo_fn else ())
             if sched.result is not None:
                 self.last_partition = sched.result
                 self.history.append({"cost": sched.result.cost,

@@ -17,8 +17,14 @@ stages and their owners:
    plans asynchronously against the buffer store.
 
 The ``Schedule`` object is the seam between the partitioner and the
-executor: later sharding / multi-backend work plugs in here (a distributed
-executor consumes the same plans; a sharded scheduler would annotate them).
+executor, and the distributed subsystem (``repro.core.dist``, DESIGN.md §12)
+now plugs in exactly here: the resharding pass runs on the tape before
+stage 2 (so COMM ops are ordinary graph nodes the partitioner prices via
+the ``comm`` cost model), ``plan`` mixes the executor's device/mesh
+``topology`` into the merge-cache key, and ``DistBlockExecutor`` consumes
+the very same ``BlockPlan``s — lowering multi-device blocks through
+``jax.shard_map`` with explicit collectives while single-device plans fall
+through to ``BlockExecutor`` unchanged.
 
 Stage 3 is skipped on a merge-cache hit (§IV-F): the cache maps a canonical
 tape signature to the block structure, so iterative programs pay the
@@ -95,12 +101,13 @@ class Scheduler:
 
     def plan(self, tape: Sequence[Op], *, algorithm: str = "greedy",
              cost_model: str = "bohrium", node_budget: int = 100_000,
-             use_cache: bool = True) -> Schedule:
+             use_cache: bool = True, topology: Tuple = ()) -> Schedule:
         stats: Dict[str, float] = {}
         blocks: Optional[List[List[int]]] = None
         key: Optional[Tuple] = None
         if use_cache:
-            key = tape_signature(tape, algorithm, cost_model)
+            key = tape_signature(tape, algorithm, cost_model,
+                                 topology=topology)
             blocks = self.cache.get(key)
         result = None
         if blocks is None:

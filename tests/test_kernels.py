@@ -81,6 +81,93 @@ def test_fused_block_rejects_strided():
         build_fused_kernel(ops)
 
 
+# Differential sweep across the 1024-element tile boundary: sizes that are
+# NOT multiples of the flat tile (nor of the 128 lane) pin the pad/slice
+# logic, and integer dtypes pin the astype on the store path.
+TILE_EDGE_SIZES = [1, 7, 127, 129, 1000, 1023, 1025, 2061]
+
+
+@pytest.mark.parametrize("n", TILE_EDGE_SIZES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_fused_block_tile_boundary_sweep(n, dtype):
+    ops = _make_block(n, dtype)
+    fn, ins, outs = build_fused_kernel(ops, interpret=True)
+    key = jax.random.PRNGKey(n)
+    bufs = [jax.random.normal(jax.random.fold_in(key, i), (n,),
+                              jnp.float32).astype(dtype)
+            for i in range(len(ins))]
+    got = fn(*bufs)
+    want = reference_block(ops, *bufs)
+    for g, w in zip(got, want):
+        assert g.shape == w.shape and g.dtype == w.dtype
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def _make_int_block(n, dtype):
+    """where(a > b, a*b, a+b) — integer-safe ops only."""
+    mk = lambda name: BaseArray(n, np.dtype(dtype), name=name)   # noqa: E731
+    a, b, t1, t2, t3, out = (mk(x) for x in "abcdef")
+    va, vb = View.contiguous(a, (n,)), View.contiguous(b, (n,))
+    vt1, vt2 = View.contiguous(t1, (n,)), View.contiguous(t2, (n,))
+    vt3, vo = View.contiguous(t3, (n,)), View.contiguous(out, (n,))
+    return [
+        Op("greater", vt1, (va, vb), new_bases=frozenset({t1})),
+        Op("mul", vt2, (va, vb), new_bases=frozenset({t2})),
+        Op("add", vt3, (va, vb), new_bases=frozenset({t3})),
+        Op("where", vo, (vt1, vt2, vt3), new_bases=frozenset({out})),
+        Op("del", None, del_bases=frozenset({t1})),
+        Op("del", None, del_bases=frozenset({t2})),
+        Op("del", None, del_bases=frozenset({t3})),
+    ]
+
+
+@pytest.mark.parametrize("n", [7, 1000, 1025])
+@pytest.mark.parametrize("dtype", [np.int32, np.int64])
+def test_fused_block_integer_dtypes(n, dtype):
+    ops = _make_int_block(n, dtype)
+    fn, ins, outs = build_fused_kernel(ops, interpret=True)
+    rng = np.random.default_rng(n)
+    bufs = [jnp.asarray(rng.integers(-50, 50, size=n, dtype=dtype))
+            for _ in range(len(ins))]
+    got = fn(*bufs)
+    want = reference_block(ops, *bufs)
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_fused_block_fallback_boundary_is_pinned():
+    """fused_block_fn must fall back to the XLA path exactly for blocks the
+    flat tiler cannot express — and the fallback must stay correct."""
+    from repro.kernels.fused_block.ops import fused_block_fn
+    n = 100                                   # not a multiple of the tile
+    # supported: same-domain elementwise chain -> Pallas path
+    ops = _make_block(n, np.float32)
+    fn, ins, outs, used = fused_block_fn(ops)
+    assert used
+    # strided view -> fallback
+    a = BaseArray(n, np.dtype(np.float32))
+    o = BaseArray(n, np.dtype(np.float32))
+    ops = [Op("copy", View.contiguous(o, (n // 2,)),
+              (View(a, 0, (n // 2,), (2,)),), new_bases=frozenset({o}))]
+    fn, ins, outs, used = fused_block_fn(ops)
+    assert not used
+    buf = jnp.arange(n, dtype=jnp.float32)
+    (got,) = fn(buf)
+    np.testing.assert_array_equal(np.asarray(got)[:n // 2],
+                                  np.asarray(buf)[::2])
+    # reduction -> fallback (mixed sweep domain)
+    r = BaseArray(1, np.dtype(np.float32))
+    ops = [Op("reduce_sum", View.contiguous(r, ()),
+              (View.contiguous(a, (n,)),), axis=0, new_bases=frozenset({r}))]
+    fn, ins, outs, used = fused_block_fn(ops)
+    assert not used
+    (got,) = fn(buf)
+    np.testing.assert_allclose(float(np.asarray(got).reshape(())),
+                               float(np.sum(np.arange(n))), rtol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
