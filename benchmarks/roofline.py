@@ -1,4 +1,14 @@
-"""Roofline analysis (§Roofline in EXPERIMENTS.md) from dry-run artifacts.
+"""Roofline analysis (§Roofline in EXPERIMENTS.md) from dry-run artifacts,
+plus the fused-vs-fallback kernel-coverage sweep (ISSUE 3):
+
+    PYTHONPATH=src python -m benchmarks.roofline --coverage [--ci]
+
+The coverage sweep runs every paper benchmark (full sizes, XLA execution)
+and classifies each dispatched work block with the Pallas codegen's
+analysis layer (``block_lower_reason`` — no Pallas execution, so it is
+fast) — reporting, per program, how many blocks lower through the fused
+kernel generator vs fall back, with the per-reason breakdown.  ``--ci``
+gates aggregate non-COMM coverage at ≥80%.
 
 Per (arch × shape) cell on the single-pod mesh, three terms in seconds:
 
@@ -118,7 +128,87 @@ def render_markdown(rows: List[Dict]) -> str:
     return "\n".join(out)
 
 
-def main():
+def kernel_coverage() -> List[Dict]:
+    """Run the benchmark suite, classifying every dispatched work block.
+
+    Returns one row per program: ``{"program", "blocks", "pallas",
+    "fallback", "coverage", "reasons"}``.  COMM blocks are excluded from
+    the denominator (they are placement changes, never compute kernels)."""
+    from benchmarks.programs import BENCHMARKS
+    from repro.core.ir import COMM_OPS
+    from repro.core.lazy import fresh_runtime
+    from repro.kernels.fused_block.codegen import block_lower_reason
+
+    rows: List[Dict] = []
+    for name, fn in BENCHMARKS.items():
+        counts = {"pallas": 0, "fallback": 0, "comm": 0}
+        reasons: Dict[str, int] = {}
+        with fresh_runtime(algorithm="greedy", cost_model="bohrium") as rt:
+            orig = rt.executor.run_schedule
+
+            def run(schedule, buffers, _orig=orig, counts=counts,
+                    reasons=reasons):
+                for plan in schedule.blocks:
+                    if not plan.has_work:
+                        continue
+                    ops = [schedule.tape[i] for i in plan.op_indices]
+                    if any(o.opcode in COMM_OPS for o in ops):
+                        counts["comm"] += 1
+                        continue
+                    r = block_lower_reason(ops)
+                    if r is None:
+                        counts["pallas"] += 1
+                    else:
+                        counts["fallback"] += 1
+                        reasons[r] = reasons.get(r, 0) + 1
+                return _orig(schedule, buffers)
+
+            rt.executor.run_schedule = run
+            fn()
+        blocks = counts["pallas"] + counts["fallback"]
+        rows.append({
+            "program": name, "blocks": blocks, "pallas": counts["pallas"],
+            "fallback": counts["fallback"], "comm": counts["comm"],
+            "coverage": counts["pallas"] / max(1, blocks),
+            "reasons": reasons,
+        })
+    return rows
+
+
+def render_coverage(rows: List[Dict]) -> str:
+    out = ["| program | work blocks | pallas | fallback | coverage | "
+           "fallback reasons |", "|---|---|---|---|---|---|"]
+    for r in rows:
+        why = ", ".join(f"{k}:{v}" for k, v in sorted(r["reasons"].items())) \
+            or "—"
+        out.append(f"| {r['program']} | {r['blocks']} | {r['pallas']} "
+                   f"| {r['fallback']} | {r['coverage']:.1%} | {why} |")
+    tp = sum(r["pallas"] for r in rows)
+    tb = sum(r["blocks"] for r in rows)
+    out.append(f"| **total** | {tb} | {tp} | {tb - tp} "
+               f"| **{tp / max(1, tb):.1%}** | |")
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--coverage", action="store_true",
+                    help="run the fused-vs-fallback kernel-coverage sweep")
+    ap.add_argument("--ci", action="store_true",
+                    help="with --coverage: fail unless aggregate >= 80%%")
+    args = ap.parse_args(argv)
+    if args.coverage:
+        rows = kernel_coverage()
+        print(render_coverage(rows))
+        os.makedirs("experiments", exist_ok=True)
+        with open("experiments/kernel_coverage.json", "w") as f:
+            json.dump(rows, f, indent=1)
+        total = sum(r["blocks"] for r in rows)
+        cov = sum(r["pallas"] for r in rows) / max(1, total)
+        if args.ci and cov < 0.8:
+            raise SystemExit(f"kernel coverage {cov:.1%} < 80%")
+        return
     rows = table()
     print(render_markdown(rows))
     os.makedirs("experiments", exist_ok=True)

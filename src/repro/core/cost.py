@@ -201,25 +201,62 @@ class RobinsonCost(CostModel):
 # Beyond-paper models (paper §VII future work, realized for TPU v5e).
 # ---------------------------------------------------------------------------
 
-class TPUCost(CostModel):
+class _KernelAlignment:
+    """Mixin pricing whether a block actually lowers through the Pallas
+    fused-block codegen (DESIGN.md §13).
+
+    A block the codegen cannot express as ONE kernel executes on the XLA
+    fallback path, where XLA is free to split it into several fusions — we
+    model that as one extra dispatch (``2 * launch_s`` instead of one).
+    This aligns the priced fusibility with kernel expressibility: greedy
+    stops rewarding merges whose only "saving" would be lost to a fallback.
+
+    Monotonicity (Def. 6) is preserved: the expressibility analysis looks
+    only at opcodes/domains/views/axes — never at DEL/SYNC placement — so a
+    merged block costs at most ``2 * launch_s`` while its parts paid at
+    least ``2 * launch_s`` combined, and the HBM term only shrinks."""
+
+    align_codegen: bool = True
+    _expr_cache: Optional[Dict[Tuple[int, ...], bool]] = None
+
+    def _dispatches(self, b: BlockInfo) -> int:
+        if not self.align_codegen:
+            return 1
+        if self._expr_cache is None:
+            self._expr_cache = {}
+        key = tuple(o.uid for o in b.ops if not o.is_system())
+        hit = self._expr_cache.get(key)
+        if hit is None:
+            from ..kernels.fused_block.codegen import block_lower_reason
+            hit = block_lower_reason(b.ops) is None
+            self._expr_cache[key] = hit
+        return 1 if hit else 2
+
+
+class TPUCost(_KernelAlignment, CostModel):
     """Bohrium's Def. 13 with hardware units: HBM↔VMEM traffic time plus a
     per-block dispatch overhead.  Merging blocks saves both deduplicated HBM
     traffic (data locality / array contraction — bytes that stay in VMEM)
-    and one kernel launch.  Monotone: both terms only shrink under merges."""
+    and one kernel launch.  Blocks the Pallas codegen cannot express as a
+    single kernel pay a second launch (see :class:`_KernelAlignment`).
+    Monotone: every term only shrinks under merges."""
 
-    def __init__(self, hbm_bw: float = HBM_BW, launch_s: float = KERNEL_LAUNCH_S):
+    def __init__(self, hbm_bw: float = HBM_BW, launch_s: float = KERNEL_LAUNCH_S,
+                 align_codegen: bool = True):
         self.name = "tpu"
         self.unit = "bytes"
         self.hbm_bw = hbm_bw
         self.launch_s = launch_s
+        self.align_codegen = align_codegen
 
     def block_cost(self, b: BlockInfo) -> float:
         if all(o.is_system() for o in b.ops):
             return 0.0   # DEL/SYNC-only blocks dispatch nothing
-        return b.ext_size("bytes") / self.hbm_bw + self.launch_s
+        return (b.ext_size("bytes") / self.hbm_bw
+                + self.launch_s * self._dispatches(b))
 
 
-class TPUDistCost(CostModel):
+class TPUDistCost(_KernelAlignment, CostModel):
     """Communication-aware WSP (the paper's distributed future-work bullet).
 
     Bases may be sharded along one dimension across ``n_shards`` devices
@@ -235,12 +272,13 @@ class TPUDistCost(CostModel):
     """
 
     def __init__(self, hbm_bw: float = HBM_BW, ici_bw: float = ICI_BW,
-                 launch_s: float = KERNEL_LAUNCH_S):
+                 launch_s: float = KERNEL_LAUNCH_S, align_codegen: bool = True):
         self.name = "tpu_dist"
         self.unit = "bytes"
         self.hbm_bw = hbm_bw
         self.ici_bw = ici_bw
         self.launch_s = launch_s
+        self.align_codegen = align_codegen
 
     @staticmethod
     def halo_bytes(v: View) -> int:
@@ -266,7 +304,8 @@ class TPUDistCost(CostModel):
         reads, writes = b.ext_views()
         hbm = sum(v.nbytes for v in (*reads, *writes))
         ici = sum(self.halo_bytes(v) for v in (*reads, *writes))
-        return hbm / self.hbm_bw + ici / self.ici_bw + self.launch_s
+        return (hbm / self.hbm_bw + ici / self.ici_bw
+                + self.launch_s * self._dispatches(b))
 
 
 class TPUFMACost(TPUCost):
@@ -364,6 +403,22 @@ _MODELS = {
 
 
 def make_cost_model(name: str, **kw) -> CostModel:
+    """Instantiate a registered WSP cost model by name.
+
+    Registry (``**kw`` forwards to the model constructor):
+
+    * ``"bohrium"``      — Def. 13, unique external accesses (paper default)
+    * ``"max_contract"`` — Def. 19, non-contracted arrays
+    * ``"max_locality"`` — Def. 20, split identical access pairs
+    * ``"robinson"``     — Def. 21, lexicographic combination
+    * ``"tpu"``          — HBM time + launches, Pallas-codegen aligned
+    * ``"tpu_dist"``     — ``tpu`` plus ICI halo-exchange time
+    * ``"tpu_fma"``      — ``tpu`` plus a mul→add co-location bonus
+    * ``"comm"``         — sharded-IR model pricing explicit COMM nodes
+
+    All models are monotone (``merge_saving >= 0``); models with
+    ``sparse_weights=True`` opt into the sparse saving-support weight graph
+    (DESIGN.md §5)."""
     try:
         return _MODELS[name](**kw)
     except KeyError:

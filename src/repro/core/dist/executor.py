@@ -174,7 +174,7 @@ class DistBlockExecutor(BlockExecutor):
             fn = jax.jit(fn, donate_argnums=donate)
         self.stats["shard_map_blocks"] += 1
         self._sharded_keys.add(self._cache_key(ops, plan))
-        return fn, bool(donate)
+        return fn, bool(donate), None
 
     def _compile(self, ops: Sequence[Op], plan) -> Tuple:
         lowered = self._compile_sharded(ops, plan)

@@ -299,8 +299,17 @@ class BlockExecutor:
         self._cache: Dict[Tuple, Tuple] = {}
         self._empty_salts = None
         self.sync_store: Dict[int, jnp.ndarray] = {}
+        #: With ``backend='pallas'``, every dispatched work block counts
+        #: either into ``pallas_blocks`` (lowered through the fused-block
+        #: codegen) or into ``pallas_fallback_blocks``, with the per-reason
+        #: breakdown in ``pallas_fallbacks`` (reason slug -> count; see
+        #: ``repro.kernels.fused_block.codegen.REASONS`` and DESIGN.md §13).
+        #: Counters are per-dispatch, so ``pallas_blocks /
+        #: (pallas_blocks + pallas_fallback_blocks)`` is the kernel
+        #: coverage of the executed schedule.
         self.stats = {"blocks_run": 0, "exec_cache_hits": 0,
                       "exec_cache_misses": 0, "pallas_blocks": 0,
+                      "pallas_fallback_blocks": 0, "pallas_fallbacks": {},
                       "donated_buffers": 0}
 
     def donation_enabled(self) -> bool:
@@ -326,25 +335,38 @@ class BlockExecutor:
 
     def _compile(self, ops: Sequence[Op], plan) -> Tuple:
         """Build (and jit) the executable for one block plan.  Returns
-        ``(fn, donates)`` — ``donates`` records whether the executable was
-        compiled with ``donate_argnums`` (feeds the per-run stat)."""
+        ``(fn, donates, lower)`` — ``donates`` records whether the
+        executable was compiled with ``donate_argnums`` (feeds the per-run
+        stat); ``lower`` is ``"pallas"`` when the block lowered through the
+        fused-block codegen, a fallback reason slug when ``backend='pallas'``
+        had to fall back to XLA, and ``None`` on the plain XLA backend."""
+        lower = None
         if self.backend == "pallas":
             from ..kernels.fused_block.ops import fused_block_fn
-            pfn, fins, fouts, used_pallas = fused_block_fn(ops)
-            if used_pallas:
-                # kernel path takes no RNG salts (elementwise blocks never
-                # contain random ops)
+            fn, fins, fouts, reason = fused_block_fn(ops, seed=self.seed)
+            if reason is None:
                 assert tuple(fins) == plan.inputs and tuple(fouts) == plan.outputs
-                self.stats["pallas_blocks"] += 1
-                return (lambda *a: pfn(*a[:-1])), False
+                if self.jit:
+                    fn = jax.jit(fn)
+                return fn, False, "pallas"
+            lower = reason
         fn, fins, fouts = make_block_fn(ops, seed=self.seed)
         assert tuple(fins) == plan.inputs and tuple(fouts) == plan.outputs
         donate = plan.donatable if self.jit and self.donation_enabled() else ()
         if self.jit:
             fn = jax.jit(fn, donate_argnums=donate)
-        return fn, bool(donate)
+        return fn, bool(donate), lower
 
     def run_schedule(self, schedule, buffers: Dict[int, jnp.ndarray]) -> None:
+        """Dispatch a planned flush (stage 5) against the buffer store.
+
+        ``schedule`` is the :class:`repro.core.scheduler.Schedule` produced
+        by ``Scheduler.plan``; ``buffers`` maps base uid -> flat device
+        buffer and is updated in place with each block's outputs.  Per
+        block: look up (or compile) the executable under its structural
+        signature, feed the external input buffers plus the RNG salts, then
+        honor SYNC (snapshot into ``sync_store``) and DEL (free) in Bohrium
+        order.  Dispatch is async — nothing here blocks on device results."""
         tape = schedule.tape
         if self._empty_salts is None:
             self._empty_salts = jnp.zeros((0,), dtype=jnp.int32)
@@ -357,12 +379,18 @@ class BlockExecutor:
                 # canonical signature guarantees positional correspondence
                 # with the cached executable across flushes.
                 if cached is None:
-                    fn, donates = self._compile(ops, plan)
-                    self._cache[key] = (fn, donates)
+                    fn, donates, lower = self._compile(ops, plan)
+                    self._cache[key] = (fn, donates, lower)
                     self.stats["exec_cache_misses"] += 1
                 else:
-                    fn, donates = cached
+                    fn, donates, lower = cached
                     self.stats["exec_cache_hits"] += 1
+                if lower == "pallas":
+                    self.stats["pallas_blocks"] += 1
+                elif lower is not None:
+                    self.stats["pallas_fallback_blocks"] += 1
+                    fb = self.stats["pallas_fallbacks"]
+                    fb[lower] = fb.get(lower, 0) + 1
                 in_bufs = []
                 for u in plan.inputs:
                     if u not in buffers:

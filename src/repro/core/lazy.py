@@ -34,7 +34,32 @@ Scalar = Union[int, float, bool]
 
 class Runtime:
     """Owns the tape (stage 1 of the scheduler pipeline: trace), the buffer
-    store, the staged scheduler (stages 2–4) and the executor (stage 5)."""
+    store, the staged scheduler (stages 2–4) and the executor (stage 5).
+
+    Parameters
+    ----------
+    algorithm : WSP partitioner — ``"singleton"`` (no fusion), ``"linear"``,
+        ``"greedy"`` (default) or ``"optimal"`` (branch & bound, small
+        tapes); see ``repro.core.algorithms``.
+    cost_model : name registered in ``repro.core.cost.make_cost_model``
+        (``"bohrium"`` reproduces the paper; the ``tpu*`` models price
+        hardware time and Pallas kernel expressibility).
+    use_cache : reuse block structure across structurally-identical flushes
+        (the paper's merge cache, §IV-F).
+    node_budget : cap on partitioner search nodes before falling back to
+        greedy.
+    seed : base PRNG seed for ``random`` ops (per-op salts keep draws
+        partition-invariant).
+    jit : wrap each block executable in ``jax.jit`` (disable to debug).
+    backend : ``"xla"`` executes blocks as jitted XLA programs;
+        ``"pallas"`` additionally lowers expressible blocks through the
+        fused-block Pallas codegen (one tiled kernel per block, automatic
+        per-reason fallback — DESIGN.md §13).
+    donate : buffer-donation policy (``"auto"``/``True``/``False``) for
+        inputs whose base dies inside a block.
+    mesh : optional ``jax.sharding.Mesh``; selects the distributed executor
+        (``repro.core.dist``) and enables the resharding pass.
+    """
 
     def __init__(self, algorithm: str = "greedy", cost_model: str = "bohrium",
                  use_cache: bool = True, node_budget: int = 100_000,

@@ -102,6 +102,16 @@ class Scheduler:
     def plan(self, tape: Sequence[Op], *, algorithm: str = "greedy",
              cost_model: str = "bohrium", node_budget: int = 100_000,
              use_cache: bool = True, topology: Tuple = ()) -> Schedule:
+        """Stages 2–4: turn a recorded tape into an executable ``Schedule``.
+
+        Builds the WSP graph, partitions it under ``cost_model`` with
+        ``algorithm`` (skipped entirely on a merge-cache hit keyed by the
+        canonical tape signature + policy + ``topology``), then lowers the
+        block lists into ordered :class:`BlockPlan`s.  ``topology`` is the
+        executor's device/mesh key so cached partitions are never reused
+        across different placements.  The returned ``Schedule.result`` is
+        ``None`` on a cache hit; ``Schedule.stats`` carries per-stage
+        timings."""
         stats: Dict[str, float] = {}
         blocks: Optional[List[List[int]]] = None
         key: Optional[Tuple] = None

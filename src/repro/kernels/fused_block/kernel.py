@@ -1,145 +1,40 @@
-"""Pallas TPU kernel GENERATOR for WSP partition blocks.
+"""Back-compat facade over the generalized tiled codegen (``codegen.py``).
 
-This is the TPU-native realization of the paper's per-block JIT kernels
-(§III final phase): a fusible block of same-domain elementwise array
-operations becomes ONE ``pl.pallas_call``:
-
-* ``ext[B]`` arrays (the paper's cost!) are kernel operands, streamed
-  HBM→VMEM in 1-D tiles via ``BlockSpec``;
-* contracted arrays (``new∩del``) are plain values inside the kernel body —
-  they live in VMEM/VREGs and NEVER touch HBM.  This is array contraction
-  exactly as Fig. 1d, but with the VMEM tile as the "register".
-
-The generator handles whole-base contiguous views (the common case after
-fusion legality filtering); blocks with strided/partial views fall back to
-the XLA executor path (see ops.py).
+The original module was a flat 1-D tiler restricted to whole-base,
+same-domain elementwise blocks; ISSUE 3 replaced it with the general
+multi-dimensional ``BlockSpec`` grid generator in
+:mod:`repro.kernels.fused_block.codegen` (reductions, strided/partial
+views, broadcasts).  This module keeps the historical entry point
+``build_fused_kernel`` (salt-less calling convention) for existing tests
+and external callers; new code should use
+:func:`~repro.kernels.fused_block.codegen.build_block_kernel`.
 """
 
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Dict, List, Sequence, Tuple
+from typing import Sequence
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
 
-from ...core.executor import block_io
-from ...core.ir import ELEMENTWISE, Op, View
-
-# VPU lanes = 128; sublanes = 8.  One flat tile of 8*128 f32 = 4 KiB VMEM.
-LANE = 128
-SUBLANE = 8
-DEFAULT_TILE = 8 * 128     # elements per grid step per operand
-VMEM_BUDGET = 8 * 1024 * 1024   # conservative half of v5e's 16 MiB VMEM
-
-_UNARY = {
-    "copy": lambda x: x, "sqrt": jnp.sqrt, "exp": jnp.exp, "log": jnp.log,
-    "abs": jnp.abs, "neg": jnp.negative, "sin": jnp.sin, "cos": jnp.cos,
-    "erf": jax.scipy.special.erf, "sign": jnp.sign, "rsqrt": jax.lax.rsqrt,
-    "tanh": jnp.tanh, "square": jnp.square, "reciprocal": lambda x: 1.0 / x,
-    "floor": jnp.floor,
-}
-_BINARY = {
-    "add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
-    "div": jnp.divide, "pow": jnp.power, "maximum": jnp.maximum,
-    "minimum": jnp.minimum, "greater": jnp.greater, "less": jnp.less,
-    "mod": jnp.mod,
-}
+from ...core.ir import Op
+from .codegen import (FusedBlockUnsupported, LANE, SUBLANE,  # noqa: F401
+                      VMEM_BUDGET, block_lower_reason, build_block_kernel)
 
 
-class FusedBlockUnsupported(Exception):
-    """Block shape not expressible as a flat-tiled Pallas kernel."""
-
-
-def _check_supported(ops: Sequence[Op]) -> None:
-    work = [op for op in ops if not op.is_system()]
-    if not work:
-        raise FusedBlockUnsupported("system-only block")
-    dom = work[0].domain
-    for op in work:
-        if op.opcode not in _UNARY and op.opcode not in _BINARY \
-                and op.opcode != "where":
-            raise FusedBlockUnsupported(f"opcode {op.opcode}")
-        if op.domain != dom:
-            raise FusedBlockUnsupported("mixed domains")
-        for v in (*op.in_views(), *op.out_views()):
-            if not (v.offset == 0 and v.size == v.base.size
-                    and v.is_contiguous()):
-                raise FusedBlockUnsupported("partial/strided view")
-
-
-def build_fused_kernel(ops: Sequence[Op], *, tile: int = DEFAULT_TILE,
+def build_fused_kernel(ops: Sequence[Op], *, tile: int = 0,
                        interpret: bool = True):
-    """Compile a WSP block into one Pallas kernel.
+    """Compile a WSP block into one Pallas kernel (legacy signature).
 
     Returns ``(fn, input_uids, output_uids)`` with ``fn(*flat_bufs) ->
-    tuple(flat_out_bufs)``; buffers are the 1-D base arrays.
-    Raises :class:`FusedBlockUnsupported` for blocks the flat tiler cannot
-    express (caller falls back to the XLA path).
-    """
-    _check_supported(ops)
-    work = [op for op in ops if not op.is_system()]
-    inputs, outputs, contracted = block_io(ops)
-    meta: Dict[int, Tuple[int, np.dtype]] = {}
-    for op in work:
-        for v in (*op.in_views(), *op.out_views()):
-            meta[v.base.uid] = (v.base.size, v.base.dtype)
-    n = max(size for size, _ in meta.values())
-    if any(size != n for size, _ in meta.values()):
-        raise FusedBlockUnsupported("heterogeneous base sizes")
+    tuple(flat_out_bufs)``.  ``tile`` is ignored: the generalized codegen
+    picks its own ``(rows, lanes)`` slab from the block's domain and the
+    VMEM budget.  Raises :class:`FusedBlockUnsupported` (with a ``reason``
+    slug) for the truly inexpressible blocks — gather-indexed views, COMM
+    ops, opaque opcodes."""
+    fn, ins, outs = build_block_kernel(ops, interpret=interpret)
+    empty = jnp.zeros((0,), jnp.int32)
 
-    # shrink the tile until all ext operands fit the VMEM budget
-    itemsize = max(np.dtype(dt).itemsize for _, dt in meta.values())
-    t = min(tile, _round_up(n, LANE))
-    while t > LANE and t * (len(inputs) + len(outputs)) * itemsize > VMEM_BUDGET:
-        t //= 2
-    n_pad = _round_up(n, t)
-    grid = (n_pad // t,)
+    def saltless(*bufs):
+        return fn(*bufs, empty)
 
-    def kernel(*refs):
-        env: Dict[int, jnp.ndarray] = {}
-        for u, r in zip(inputs, refs[:len(inputs)]):
-            env[u] = r[...]
-        for op in work:
-            vals = []
-            for v in op.inputs:
-                if isinstance(v, View):
-                    vals.append(env[v.base.uid])
-                else:
-                    vals.append(v)
-            oc = op.opcode
-            if oc in _UNARY:
-                out = _UNARY[oc](*vals)
-            elif oc in _BINARY:
-                out = _BINARY[oc](*vals)
-            else:                      # where
-                out = jnp.where(*vals)
-            u = op.out.base.uid
-            out = jnp.broadcast_to(out, (t,)).astype(meta[u][1])
-            env[u] = out               # contracted arrays stay right here
-        for u, r in zip(outputs, refs[len(inputs):]):
-            r[...] = env[u]
-
-    spec = pl.BlockSpec((t,), lambda i: (i,))
-    call = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[spec] * len(inputs),
-        out_specs=[spec] * len(outputs),
-        out_shape=[jax.ShapeDtypeStruct((n_pad,), meta[u][1]) for u in outputs],
-        interpret=interpret,
-    )
-
-    def fn(*bufs):
-        padded = [jnp.pad(b, (0, n_pad - b.shape[0])) for b in bufs]
-        outs = call(*padded)
-        return tuple(o[:n] for o in outs)
-
-    return fn, inputs, outputs
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
+    return saltless, ins, outs

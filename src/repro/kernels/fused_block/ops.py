@@ -1,29 +1,34 @@
-"""jit'd public wrapper around the fused-block Pallas kernel, with automatic
-fallback to the XLA per-block path when the flat tiler cannot express the
-block (strided views, reductions, mixed domains)."""
+"""Public wrapper around the fused-block Pallas codegen, with automatic
+fallback to the XLA per-block path (``make_block_fn``) for the blocks the
+tiler cannot express.  The returned ``reason`` tells the caller *why* a
+block fell back (``None`` means the Pallas kernel is used); the executor
+aggregates these into per-reason stats counters (DESIGN.md §13)."""
 
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
-
-import jax
+from typing import Optional, Sequence, Tuple
 
 from ...core.executor import make_block_fn
 from ...core.ir import Op
-from .kernel import FusedBlockUnsupported, build_fused_kernel
+from .codegen import FusedBlockUnsupported, build_block_kernel
 
 
-def fused_block_fn(ops: Sequence[Op], *, interpret: bool = True,
-                   tile: int = 8 * 128):
+def fused_block_fn(ops: Sequence[Op], *, seed: int = 0,
+                   interpret: bool = True):
     """Best-effort fused executable for a WSP block.
 
-    Returns ``(fn, input_uids, output_uids, used_pallas)``; ``fn`` is jitted
-    either over the Pallas kernel or over the XLA fallback."""
+    Returns ``(fn, input_uids, output_uids, reason)``.  ``fn(*bufs, salts)``
+    follows the ``make_block_fn`` calling convention either way, so the
+    executor dispatches both paths identically; ``reason`` is ``None`` when
+    the block lowered through the Pallas codegen, else the
+    :class:`FusedBlockUnsupported` reason slug and ``fn`` is the
+    (bit-identical) XLA fallback."""
     try:
-        fn, ins, outs = build_fused_kernel(ops, tile=tile, interpret=interpret)
-        return jax.jit(fn), ins, outs, True
-    except FusedBlockUnsupported:
-        import jax.numpy as jnp
-        raw, ins, outs = make_block_fn(ops)
-        fn = lambda *bufs: raw(*bufs, jnp.zeros((0,), jnp.int32))  # noqa: E731
-        return jax.jit(fn), ins, outs, False
+        fn, ins, outs = build_block_kernel(ops, seed=seed, interpret=interpret)
+        return fn, ins, outs, None
+    except FusedBlockUnsupported as e:
+        reason = e.reason
+    except Exception:       # builder bug: degrade to the XLA path, not a crash
+        reason = "error"
+    fn, ins, outs = make_block_fn(ops, seed=seed)
+    return fn, ins, outs, reason

@@ -1,0 +1,413 @@
+"""ISSUE 3 test surface for the generalized tiled Pallas block codegen.
+
+Three layers:
+
+* **fallback reasons** — every ``FusedBlockUnsupported`` reason slug is
+  raised by a concrete block, counted in the executor's per-reason stats,
+  and the fallback executable stays bit-identical to the XLA path;
+* **differential sweep** — reductions (full / leading / trailing axis),
+  strided & partial views (incl. read-modify-write), and scalar/row/column
+  broadcasts lower through the codegen and, run jitted in interpret mode,
+  are bit-identical to ``make_block_fn`` (reductions use integer-valued
+  doubles so every summation order is exact);
+* **kernel coverage** — on the scaled-down paper benchmark suite, ≥80% of
+  dispatched non-COMM work blocks lower through the Pallas codegen and the
+  program results match the XLA backend.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.executor import make_block_fn
+from repro.core.ir import BaseArray, Op, View
+from repro.kernels.fused_block.codegen import (REASONS, FusedBlockUnsupported,
+                                               block_lower_reason,
+                                               build_block_kernel)
+
+SALTS0 = None
+
+
+def _salts():
+    global SALTS0
+    if SALTS0 is None:
+        SALTS0 = jnp.zeros((0,), jnp.int32)
+    return SALTS0
+
+
+def _diff(ops, bufs, *, seed=0, exact=True, salts=None):
+    """Assert the Pallas path exists and matches the XLA path (both jitted,
+    matching how the executor dispatches them)."""
+    assert block_lower_reason(ops) is None
+    fn, ins, outs = build_block_kernel(ops, seed=seed)
+    ref, rins, routs = make_block_fn(ops, seed=seed)
+    assert list(ins) == list(rins) and list(outs) == list(routs)
+    s = _salts() if salts is None else salts
+    got = jax.jit(fn)(*bufs, s)
+    want = jax.jit(ref)(*bufs, s)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.shape == w.shape and g.dtype == w.dtype
+        if exact:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        else:
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-12, atol=1e-12)
+    return got
+
+
+def _base(n, dtype=np.float64, name=""):
+    return BaseArray(n, np.dtype(dtype), name=name)
+
+
+def _ints(rng, shape, lo=-9, hi=9, dtype=np.float64):
+    return jnp.asarray(rng.integers(lo, hi, shape).astype(dtype).reshape(-1))
+
+
+# ---------------------------------------------------------------------------
+# fallback reasons: each slug raised by a concrete block
+# ---------------------------------------------------------------------------
+
+def _reason_blocks():
+    """One representative inexpressible block per reason slug."""
+    n = 64
+    a = _base(n)
+    o = _base(n)
+    va, vo = View.contiguous(a, (n,)), View.contiguous(o, (n,))
+    blocks = {}
+    blocks["system_only"] = [Op("sync", None, sync_bases=frozenset({a}))]
+    e = _base(1)
+    blocks["empty_domain"] = [Op("copy", View.contiguous(e, (0,)), (0.0,),
+                                 new_bases=frozenset({e}))]
+    c = _base(n)
+    blocks["comm"] = [Op("comm_allgather", View.contiguous(c, (n,)), (va,),
+                         new_bases=frozenset({c}))]
+    m = _base(n)
+    blocks["opcode"] = [Op("matmul", View.contiguous(m, (8, 8)),
+                           (View.contiguous(a, (8, 8)),
+                            View.contiguous(o, (8, 8))),
+                           new_bases=frozenset({m}))]
+    d2 = _base(n // 2)
+    blocks["mixed_domain"] = [
+        Op("copy", vo, (va,), new_bases=frozenset({o})),
+        Op("copy", View.contiguous(d2, (n // 2,)), (View(a, 0, (n // 2,), (1,)),),
+           new_bases=frozenset({d2})),
+    ]
+    rev = _base(n)
+    blocks["irregular_view"] = [Op("copy", View.contiguous(rev, (n,)),
+                                   (View(a, n - 1, (n,), (-1,)),),
+                                   new_bases=frozenset({rev}))]
+    r3 = _base(16)
+    blocks["reduction_axis"] = [
+        Op("reduce_sum", View.contiguous(r3, (4, 4)),
+           (View.contiguous(a, (4, 4, 4)),), axis=1, new_bases=frozenset({r3}))]
+    rs = _base(n)
+    blocks["reduction_out"] = [
+        Op("reduce_sum", View(rs, 0, (8,), (2,)),
+           (View.contiguous(a, (8, 8)),), axis=1, new_bases=frozenset({rs}))]
+    w = _base(n)
+    blocks["view_conflict"] = [
+        Op("copy", View(w, 0, (n // 2,), (1,)), (View(a, 0, (n // 2,), (1,)),),
+           new_bases=frozenset({w})),
+        # reads w[16:48): overlaps the [0:32) write without being identical
+        Op("copy", View.contiguous(o, (n // 2,)),
+           (View(w, 16, (n // 2,), (1,)),), new_bases=frozenset({o})),
+    ]
+    big = _base(2 ** 23)
+    vb = View.contiguous(big, (1, 2 ** 23))
+    bo = _base(2 ** 23)
+    blocks["vmem"] = [Op("copy", View.contiguous(bo, (1, 2 ** 23)), (vb,),
+                         new_bases=frozenset({bo}))]
+    return blocks
+
+
+def test_every_reason_is_raised():
+    blocks = _reason_blocks()
+    for reason, ops in blocks.items():
+        assert block_lower_reason(ops) == reason, reason
+        with pytest.raises(FusedBlockUnsupported) as ei:
+            build_block_kernel(ops)
+        assert ei.value.reason == reason
+    # the documented reason list covers everything we can construct
+    assert set(blocks) <= set(REASONS)
+
+
+def test_reason_slugs_are_documented():
+    for reason in _reason_blocks():
+        assert reason in REASONS
+
+
+def test_fallback_fn_is_the_xla_path():
+    """On fallback, fused_block_fn returns make_block_fn's executable —
+    bit-identical to the BlockExecutor XLA path by construction."""
+    from repro.kernels.fused_block.ops import fused_block_fn
+    n = 64
+    a = _base(n)
+    rev = _base(n)
+    ops = [Op("copy", View.contiguous(rev, (n,)),
+              (View(a, n - 1, (n,), (-1,)),), new_bases=frozenset({rev}))]
+    fn, ins, outs, reason = fused_block_fn(ops)
+    assert reason == "irregular_view"
+    ref, _, _ = make_block_fn(ops)
+    buf = jnp.arange(n, dtype=jnp.float64)
+    got = jax.jit(fn)(buf, _salts())
+    want = jax.jit(ref)(buf, _salts())
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+
+
+def test_executor_counts_fallback_reasons():
+    """backend='pallas' increments pallas_fallbacks[reason] per dispatched
+    fallback block and the results equal the XLA backend bit-for-bit."""
+    from repro.core import lazy as bh
+    from repro.core.lazy import fresh_runtime
+    res, stats = {}, {}
+    for backend in ("xla", "pallas"):
+        with fresh_runtime(algorithm="greedy", backend=backend) as rt:
+            a = bh.asarray(np.arange(12.0).reshape(3, 4))
+            b = bh.asarray(np.arange(12.0)[::-1].reshape(4, 3))
+            mm = bh.matmul(a, b)                       # opaque -> "opcode"
+            x = bh.asarray(np.arange(16.0))
+            rev = x[::-1] * 2.0                        # -> "irregular_view"
+            cube = bh.asarray(np.arange(27.0).reshape(3, 3, 3))
+            mid = cube.sum(axis=1)                     # -> "reduction_axis"
+            ok = x * 2.0 + 1.0                         # -> Pallas kernel
+            res[backend] = (mm.numpy(), rev.numpy(), mid.numpy(), ok.numpy())
+            stats[backend] = rt.executor.stats
+    for g, w in zip(res["pallas"], res["xla"]):
+        np.testing.assert_array_equal(g, w)
+    fb = stats["pallas"]["pallas_fallbacks"]
+    assert fb.get("opcode", 0) >= 1
+    assert fb.get("irregular_view", 0) >= 1
+    assert fb.get("reduction_axis", 0) >= 1
+    assert stats["pallas"]["pallas_fallback_blocks"] == sum(fb.values())
+    assert stats["pallas"]["pallas_blocks"] >= 1      # the fusible rest
+
+
+# ---------------------------------------------------------------------------
+# differential sweep: reductions / strided views / broadcasts, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opcode", ["reduce_sum", "reduce_max", "reduce_min",
+                                    "reduce_prod"])
+@pytest.mark.parametrize("n", [7, 127, 1000, 2049])
+def test_full_1d_reduction_bitwise(opcode, n):
+    rng = np.random.default_rng(n)
+    a = _base(n)
+    r = _base(1)
+    ops = [Op(opcode, View.contiguous(r, ()), (View.contiguous(a, (n,)),),
+              axis=0, new_bases=frozenset({r}))]
+    # prod: factors of 1/2 keep every partial product exactly representable
+    lo, hi = (1, 3) if opcode == "reduce_prod" else (-9, 9)
+    _diff(ops, [_ints(rng, n, lo, hi)])
+
+
+@pytest.mark.parametrize("axis,rows,cols", [(0, 100, 24), (1, 13, 40),
+                                            (0, 9, 130), (1, 300, 5)])
+def test_2d_axis_reduction_bitwise(axis, rows, cols):
+    rng = np.random.default_rng(axis * 1000 + rows)
+    a = _base(rows * cols)
+    out_shape = (cols,) if axis == 0 else (rows,)
+    r = _base(int(np.prod(out_shape)))
+    ops = [Op("reduce_sum", View.contiguous(r, out_shape),
+              (View.contiguous(a, (rows, cols)),), axis=axis,
+              new_bases=frozenset({r}))]
+    _diff(ops, [_ints(rng, rows * cols)])
+
+
+def test_narrowing_reduction_accumulates_in_input_dtype():
+    """float64 input reduced into a float32 base: the kernel must
+    accumulate in f64 and cast once, like the XLA reduce-then-write."""
+    n = 3000
+    rng = np.random.default_rng(21)
+    a = _base(n, np.float64)
+    r = _base(1, np.float32)
+    ops = [Op("reduce_sum", View.contiguous(r, ()),
+              (View.contiguous(a, (n,)),), axis=0, new_bases=frozenset({r}))]
+    _diff(ops, [_ints(rng, n)])
+
+
+def test_trailing_axis_reduction_3d_bitwise():
+    rng = np.random.default_rng(3)
+    d = (5, 6, 7)
+    a = _base(int(np.prod(d)))
+    r = _base(30)
+    ops = [Op("reduce_sum", View.contiguous(r, d[:-1]),
+              (View.contiguous(a, d),), axis=2, new_bases=frozenset({r}))]
+    _diff(ops, [_ints(rng, int(np.prod(d)))])
+
+
+@pytest.mark.parametrize("m", [10, 16, 33])
+def test_stencil_rmw_bitwise(m):
+    """Shifted window reads + a partial strided write into the base —
+    the heat-equation block shape."""
+    g = _base(m * m, name="g")
+    inner = _base((m - 2) * (m - 2), name="inner")
+    win = lambda i0, j0: View(g, i0 * m + j0, (m - 2, m - 2), (m, 1))  # noqa: E731
+    vin = View.contiguous(inner, (m - 2, m - 2))
+    ops = [
+        Op("add", vin, (win(1, 0), win(1, 2)), new_bases=frozenset({inner})),
+        Op("add", vin, (vin, win(0, 1))),
+        Op("add", vin, (vin, win(2, 1))),
+        Op("mul", vin, (vin, 0.25)),
+        Op("copy", win(1, 1), (vin,)),
+        Op("del", None, del_bases=frozenset({inner})),
+    ]
+    rng = np.random.default_rng(m)
+    _diff(ops, [_ints(rng, m * m, -40, 40)])
+
+
+def test_strided_column_rmw_bitwise():
+    """nbody's force[:, d] = fc + f pattern: strided read AND strided
+    scatter into an interleaved base."""
+    n = 50
+    force = _base(3 * n, name="force")
+    f = _base(n, name="f")
+    vcol = View(force, 1, (n,), (3,))
+    vf = View.contiguous(f, (n,))
+    ops = [Op("add", vcol, (vcol, vf))]
+    rng = np.random.default_rng(7)
+    _diff(ops, [_ints(rng, 3 * n), _ints(rng, n)])
+
+
+def test_broadcast_classes_bitwise():
+    """Scalar, row and column stride-0 broadcasts in one block."""
+    n, m = 21, 130
+    A = _base(n * m, name="A")
+    rowv = _base(m, name="row")
+    colv = _base(n, name="col")
+    sc = _base(1, name="sc")
+    T = _base(n * m, name="T")
+    vA = View.contiguous(A, (n, m))
+    ops = [
+        Op("mul", View.contiguous(T, (n, m)),
+           (vA, View(rowv, 0, (n, m), (0, 1))), new_bases=frozenset({T})),
+        Op("add", View.contiguous(T, (n, m)),
+           (View.contiguous(T, (n, m)), View(colv, 0, (n, m), (1, 0)))),
+        Op("maximum", View.contiguous(T, (n, m)),
+           (View.contiguous(T, (n, m)), View(sc, 0, (n, m), (0, 0)))),
+    ]
+    rng = np.random.default_rng(9)
+    _diff(ops, [_ints(rng, n * m), _ints(rng, m), _ints(rng, n),
+                _ints(rng, 1)])
+
+
+def test_scalar_domain_block_bitwise():
+    acc = _base(1, name="acc")
+    s = _base(1, name="s")
+    ops = [Op("add", View.contiguous(acc, ()),
+              (View.contiguous(acc, ()), View.contiguous(s, ())))]
+    _diff(ops, [jnp.asarray([3.0]), jnp.asarray([4.0])])
+
+
+def test_range_and_random_bitwise():
+    """range lowers to an in-kernel iota; random is drawn in the prologue
+    with the exact fallback fold_in scheme — same bits either way."""
+    n = 700
+    I = _base(n, name="I")
+    R = _base(n, name="R")
+    O = _base(n, name="O")
+    vi, vr, vo = (View.contiguous(x, (n,)) for x in (I, R, O))
+    ops = [
+        Op("range", vi, (), new_bases=frozenset({I})),
+        Op("random", vr, (), new_bases=frozenset({R})),
+        Op("mod", vo, (vi, 2.0), new_bases=frozenset({O})),
+        Op("mul", vo, (vo, vr)),
+        Op("del", None, del_bases=frozenset({I})),
+        Op("del", None, del_bases=frozenset({R})),
+    ]
+    _diff(ops, [], seed=5, salts=jnp.asarray([17], jnp.int32))
+
+
+def test_mixed_partial_broadcast_3d_bitwise():
+    """A ≥3-D view broadcast over a middle axis: the pre-broadcast dense
+    path (outside-kernel broadcast_to)."""
+    d = (4, 5, 6)
+    src = _base(4 * 6, name="src")     # varies on axes 0 and 2, bcast on 1
+    T = _base(int(np.prod(d)), name="T")
+    v = View(src, 0, d, (6, 0, 1))
+    ops = [Op("mul", View.contiguous(T, d), (v, 2.0),
+              new_bases=frozenset({T}))]
+    rng = np.random.default_rng(11)
+    _diff(ops, [_ints(rng, 4 * 6)])
+
+
+def test_int_literal_keeps_integer_arithmetic():
+    """Scalar literals pass through unconverted: int32 * int literal must
+    wrap like the XLA path, not detour through float promotion."""
+    n = 8
+    a = BaseArray(n, np.dtype(np.int32))
+    o = BaseArray(n, np.dtype(np.int32))
+    ops = [Op("mul", View.contiguous(o, (n,)), (View.contiguous(a, (n,)), 3),
+              new_bases=frozenset({o}))]
+    buf = jnp.asarray([2 ** 30, -2 ** 30, 2 ** 24 + 1, -1, 0, 1, 7, -7],
+                      jnp.int32)
+    _diff(ops, [buf])
+
+
+def test_contracted_partial_write_matches_xla():
+    """Partial writes to a contracted base: disjoint later reads observe
+    the XLA zero-fill semantics, identically."""
+    n = 32
+    t = _base(n, name="t")             # new+del inside the block
+    o = _base(n // 2, name="o")
+    ops = [
+        Op("copy", View(t, 0, (n // 2,), (1,)), (5.0,),
+           new_bases=frozenset({t})),
+        # read the UNwritten half -> zeros on both paths
+        Op("copy", View.contiguous(o, (n // 2,)),
+           (View(t, n // 2, (n // 2,), (1,)),), new_bases=frozenset({o})),
+        Op("del", None, del_bases=frozenset({t})),
+    ]
+    _diff(ops, [])
+
+
+# ---------------------------------------------------------------------------
+# kernel coverage over the paper benchmark suite (scaled down)
+# ---------------------------------------------------------------------------
+
+SCALED = [
+    ("black_scholes", (2, 1024)),
+    ("game_of_life", (2, 16)),
+    ("heat_equation", (2, 24)),
+    ("leibnitz_pi", (2, 1024)),
+    ("gauss_elimination", (4, 8)),
+    ("lu_factorization", (4, 8)),
+    ("monte_carlo_pi", (2, 1024)),
+    ("stencil_27pt", (1, 8)),
+    ("shallow_water", (2, 16)),
+    ("rosenbrock", (2, 2048)),
+    ("sor", (2, 24)),
+    ("nbody", (1, 8)),
+    ("nbody_nice", (1, 4, 16)),
+    ("lattice_boltzmann", (1, 6)),
+    ("water_ice", (2, 24)),
+]
+
+
+def test_benchmark_suite_coverage_and_differential():
+    """≥80% of dispatched non-COMM work blocks lower through the Pallas
+    codegen on the benchmark suite, and every program's result matches the
+    XLA backend (same RNG salts; reductions allow reassociation ulps)."""
+    import sys, pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.programs import BENCHMARKS
+    from repro.core.lazy import fresh_runtime
+
+    total_pallas = total_fallback = 0
+    for name, args in SCALED:
+        out = {}
+        for backend in ("xla", "pallas"):
+            with fresh_runtime(algorithm="greedy", backend=backend) as rt:
+                out[backend] = np.asarray(BENCHMARKS[name](*args))
+                if backend == "pallas":
+                    st = rt.executor.stats
+                    total_pallas += st["pallas_blocks"]
+                    total_fallback += st["pallas_fallback_blocks"]
+        np.testing.assert_allclose(
+            out["pallas"], out["xla"], rtol=1e-9, atol=1e-9,
+            err_msg=f"{name}: pallas backend diverged from xla")
+    coverage = total_pallas / max(1, total_pallas + total_fallback)
+    assert coverage >= 0.8, (
+        f"kernel coverage {coverage:.1%} < 80% "
+        f"({total_pallas} pallas / {total_fallback} fallback)")

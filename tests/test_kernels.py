@@ -70,15 +70,34 @@ def test_fused_block_contracts_temporaries():
     assert len(ins) == 3 and len(outs) == 1   # t1, t2 contracted
 
 
-def test_fused_block_rejects_strided():
+def test_fused_block_lowers_strided():
+    """ISSUE 3: regularly-strided views lower through the codegen (the old
+    flat tiler rejected them) and match the XLA slice semantics exactly."""
     n = 32
     a = BaseArray(n, np.dtype(np.float32))
     o = BaseArray(n, np.dtype(np.float32))
     va = View(a, 0, (n // 2,), (2,))          # strided view
     vo = View.contiguous(o, (n // 2,))
     ops = [Op("copy", vo, (va,), new_bases=frozenset({o}))]
-    with pytest.raises(FusedBlockUnsupported):
+    fn, ins, outs = build_fused_kernel(ops)
+    buf = jnp.arange(n, dtype=jnp.float32)
+    (got,) = fn(buf)
+    np.testing.assert_array_equal(np.asarray(got)[:n // 2],
+                                  np.asarray(buf)[::2])
+
+
+def test_fused_block_rejects_gather_shaped():
+    """Reversed (negative-stride) views have no slice plan — the one view
+    class that still needs a gather and falls back."""
+    n = 32
+    a = BaseArray(n, np.dtype(np.float32))
+    o = BaseArray(n, np.dtype(np.float32))
+    va = View(a, n - 1, (n,), (-1,))          # reversed view
+    vo = View.contiguous(o, (n,))
+    ops = [Op("copy", vo, (va,), new_bases=frozenset({o}))]
+    with pytest.raises(FusedBlockUnsupported) as ei:
         build_fused_kernel(ops)
+    assert ei.value.reason == "irregular_view"
 
 
 # Differential sweep across the 1024-element tile boundary: sizes that are
@@ -138,34 +157,47 @@ def test_fused_block_integer_dtypes(n, dtype):
 
 
 def test_fused_block_fallback_boundary_is_pinned():
-    """fused_block_fn must fall back to the XLA path exactly for blocks the
-    flat tiler cannot express — and the fallback must stay correct."""
+    """fused_block_fn must fall back to the XLA path exactly for the blocks
+    the codegen cannot express — and the fallback must stay correct.  After
+    ISSUE 3, strided views and reductions LOWER; gathers do not."""
     from repro.kernels.fused_block.ops import fused_block_fn
+    salts = jnp.zeros((0,), jnp.int32)
     n = 100                                   # not a multiple of the tile
-    # supported: same-domain elementwise chain -> Pallas path
+    # same-domain elementwise chain -> Pallas path
     ops = _make_block(n, np.float32)
-    fn, ins, outs, used = fused_block_fn(ops)
-    assert used
-    # strided view -> fallback
+    fn, ins, outs, reason = fused_block_fn(ops)
+    assert reason is None
+    # strided view -> now ALSO the Pallas path
     a = BaseArray(n, np.dtype(np.float32))
     o = BaseArray(n, np.dtype(np.float32))
     ops = [Op("copy", View.contiguous(o, (n // 2,)),
               (View(a, 0, (n // 2,), (2,)),), new_bases=frozenset({o}))]
-    fn, ins, outs, used = fused_block_fn(ops)
-    assert not used
+    fn, ins, outs, reason = fused_block_fn(ops)
+    assert reason is None
     buf = jnp.arange(n, dtype=jnp.float32)
-    (got,) = fn(buf)
+    (got,) = fn(buf, salts)
     np.testing.assert_array_equal(np.asarray(got)[:n // 2],
                                   np.asarray(buf)[::2])
-    # reduction -> fallback (mixed sweep domain)
+    # full 1-D reduction -> now the Pallas path (grid-accumulated)
     r = BaseArray(1, np.dtype(np.float32))
     ops = [Op("reduce_sum", View.contiguous(r, ()),
               (View.contiguous(a, (n,)),), axis=0, new_bases=frozenset({r}))]
-    fn, ins, outs, used = fused_block_fn(ops)
-    assert not used
-    (got,) = fn(buf)
+    fn, ins, outs, reason = fused_block_fn(ops)
+    assert reason is None
+    (got,) = fn(buf, salts)
     np.testing.assert_allclose(float(np.asarray(got).reshape(())),
                                float(np.sum(np.arange(n))), rtol=1e-6)
+    # gather opcode -> fallback with a machine-readable reason
+    idx = BaseArray(4, np.dtype(np.float32))
+    g = BaseArray(4, np.dtype(np.float32))
+    ops = [Op("gather", View.contiguous(g, (4,)),
+              (View.contiguous(a, (n,)), View.contiguous(idx, (4,))),
+              axis=0, new_bases=frozenset({g}))]
+    fn, ins, outs, reason = fused_block_fn(ops)
+    assert reason == "opcode"
+    got = fn(buf, jnp.asarray([0., 3., 7., 11.], jnp.float32), salts)
+    np.testing.assert_array_equal(np.asarray(got[0]),
+                                  np.asarray(buf)[[0, 3, 7, 11]])
 
 
 # ---------------------------------------------------------------------------

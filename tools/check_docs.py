@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Docs link-checker (CI `docs` job): every relative markdown link and
+referenced repo path in `*.md` files must exist.
+
+    python tools/check_docs.py [root]
+
+Checks ``[text](target)`` links (external ``http(s)://`` / ``mailto:``
+skipped, ``#fragment`` stripped) and fails with a list of dangling targets.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "experiments"}
+
+
+def check(root: pathlib.Path):
+    errors = []
+    md_files = [p for p in sorted(root.rglob("*.md"))
+                if not any(part in SKIP_DIRS for part in p.parts)]
+    for md in md_files:
+        text = md.read_text(encoding="utf-8")
+        for m in LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                      # pure in-page anchor
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(root)}: dangling link "
+                              f"-> {target}")
+    return md_files, errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    md_files, errors = check(root)
+    print(f"checked {len(md_files)} markdown files under {root}")
+    for e in errors:
+        print("ERROR:", e)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
