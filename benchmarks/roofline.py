@@ -129,16 +129,21 @@ def render_markdown(rows: List[Dict]) -> str:
 
 
 def kernel_coverage() -> List[Dict]:
-    """Run the benchmark suite, classifying every dispatched work block.
+    """Run the benchmark suite, classifying every dispatched work block
+    through the scheduler's lowering-selection path (DESIGN.md §14): each
+    block is put to the ``("pallas", "xla")`` backend stack exactly as a
+    ``backend='pallas'`` executor's lower stage would, and the chosen
+    backend decides the column (no Pallas execution, so the sweep is fast).
 
     Returns one row per program: ``{"program", "blocks", "pallas",
     "fallback", "coverage", "reasons"}``.  COMM blocks are excluded from
     the denominator (they are placement changes, never compute kernels)."""
     from benchmarks.programs import BENCHMARKS
+    from repro.core.backends import LoweringContext, select_lowering
     from repro.core.ir import COMM_OPS
     from repro.core.lazy import fresh_runtime
-    from repro.kernels.fused_block.codegen import block_lower_reason
 
+    ctx = LoweringContext()
     rows: List[Dict] = []
     for name, fn in BENCHMARKS.items():
         counts = {"pallas": 0, "fallback": 0, "comm": 0}
@@ -155,11 +160,12 @@ def kernel_coverage() -> List[Dict]:
                     if any(o.opcode in COMM_OPS for o in ops):
                         counts["comm"] += 1
                         continue
-                    r = block_lower_reason(ops)
-                    if r is None:
+                    d = select_lowering(ops, plan, ("pallas", "xla"), ctx)
+                    if d.backend == "pallas":
                         counts["pallas"] += 1
                     else:
                         counts["fallback"] += 1
+                        r = d.reason_for("pallas") or "unknown"
                         reasons[r] = reasons.get(r, 0) + 1
                 return _orig(schedule, buffers)
 

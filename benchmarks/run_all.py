@@ -1,0 +1,140 @@
+"""Canonical perf snapshot — one JSON artifact per commit (ISSUE 4).
+
+    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_4.json [--quick]
+
+Aggregates the three benchmark families that gate this repo into a single
+machine-readable snapshot, seeding the bench trajectory (CI runs this and
+uploads the JSON as an artifact; compare artifacts across commits to see
+the trend):
+
+* ``partition_scaling`` — staged graph+partition seconds per tape family
+  and size (ISSUE 1 metric);
+* ``kernel_coverage``   — fused-vs-fallback Pallas coverage over the paper
+  suite through the lowering-selection path (ISSUE 3 metric), plus the
+  per-reason fallback breakdown;
+* ``comm_scaling``      — fused vs unfused interconnect bytes over
+  simulated host devices (ISSUE 2 metric), with the executor-swap
+  bit-identity check;
+* ``mixed_lowering``    — per-backend block counts of one representative
+  ``backend='pallas'`` flush (ISSUE 4: the lower stage routing one flush
+  across ≥ 2 backends).
+
+Every section is a summary, not a sweep: the snapshot must stay cheap
+enough to run on every CI push.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+# runnable both as `python benchmarks/run_all.py` and `-m benchmarks.run_all`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+
+def snap_partition_scaling(sizes: List[int]) -> List[Dict]:
+    from benchmarks.partition_scaling import TAPES, run_engine
+    rows = []
+    for family, make in TAPES.items():
+        for n_ops in sizes:
+            tape = make(n_ops)
+            r = run_engine(tape, "staged")
+            rows.append({"family": family, "n_ops": len(tape),
+                         "t_graph_s": r["t_graph"],
+                         "t_partition_s": r["t_partition"],
+                         "cost": r["cost"], "n_blocks": r["n_blocks"]})
+            print(f"partition_scaling/{family}/{len(tape)}ops: "
+                  f"graph+partition {r['t']:.3f}s "
+                  f"({r['n_blocks']} blocks)", flush=True)
+    return rows
+
+
+def snap_kernel_coverage() -> Dict:
+    from benchmarks.roofline import kernel_coverage
+    rows = kernel_coverage()
+    blocks = sum(r["blocks"] for r in rows)
+    pallas = sum(r["pallas"] for r in rows)
+    reasons: Dict[str, int] = {}
+    for r in rows:
+        for k, v in r["reasons"].items():
+            reasons[k] = reasons.get(k, 0) + v
+    out = {"programs": len(rows), "work_blocks": blocks, "pallas": pallas,
+           "coverage": pallas / max(1, blocks), "reasons": reasons,
+           "per_program": rows}
+    print(f"kernel_coverage: {pallas}/{blocks} blocks "
+          f"({out['coverage']:.1%}) across {len(rows)} programs", flush=True)
+    return out
+
+
+def snap_comm_scaling(devices: List[int]) -> List[Dict]:
+    from benchmarks.comm_scaling import _spawn
+    rows: List[Dict] = []
+    for n in devices:
+        for r in _spawn(n):
+            rows.append(r)
+            bu, bf = r["bytes_singleton"], r["bytes_greedy"]
+            sv = f"{(1 - bf / bu) * 100:.0f}%" if bu else "-"
+            print(f"comm_scaling/{r['program']}/{n}dev: "
+                  f"fused {bf:.0f}B vs unfused {bu:.0f}B ({sv} saved), "
+                  f"identical={r['bit_identical']}", flush=True)
+    return rows
+
+
+def snap_mixed_lowering() -> Dict:
+    """One flush, ≥ 2 backends: the lower stage routes a matmul to the XLA
+    floor and the elementwise/reduction blocks to the Pallas codegen."""
+    import numpy as np
+    from repro.core import lazy as bh
+    from repro.core.lazy import fresh_runtime
+    with fresh_runtime(algorithm="greedy", backend="pallas") as rt:
+        a = bh.asarray(np.arange(64.0).reshape(8, 8))
+        b = bh.asarray(np.arange(64.0)[::-1].reshape(8, 8))
+        mm = bh.matmul(a, b)
+        x = bh.random((4096,))
+        y = (bh.sin(x) * 0.5 + x * 0.25) * 2.0
+        total = float((mm.sum() + y.sum()).numpy())
+        st = rt.executor.stats
+        out = {"result": total,
+               "backend_blocks": dict(st["backend_blocks"]),
+               "fallback_reasons": {k: dict(v) for k, v in
+                                    st["backend_fallbacks"].items() if v}}
+    print(f"mixed_lowering: backend_blocks={out['backend_blocks']}",
+          flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_4.json",
+                    help="output path for the snapshot JSON")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes / fewer device counts")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    sizes = [250, 1000] if not args.quick else [250]
+    devices = [1, 8] if not args.quick else [2]
+    snap = {
+        "schema": "bench_snapshot_v1",
+        "argv": sys.argv[1:],
+        "unix_time": t0,
+        "partition_scaling": snap_partition_scaling(sizes),
+        "kernel_coverage": snap_kernel_coverage(),
+        "comm_scaling": snap_comm_scaling(devices),
+        "mixed_lowering": snap_mixed_lowering(),
+    }
+    snap["wall_s"] = time.time() - t0
+    with open(args.json, "w") as f:
+        json.dump(snap, f, indent=1)
+        f.write("\n")
+    print(f"\nsnapshot -> {args.json} ({snap['wall_s']:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,9 +34,11 @@ for algorithm in ("singleton", "linear", "greedy", "optimal"):
 print("\nCost = unique external array elements accessed per block (Def. 13).")
 print("Fewer blocks + lower cost = better data locality + contraction.")
 
-# The same program through the Pallas block codegen (backend='pallas'):
-# each fused block becomes ONE tiled kernel; contracted temporaries stay in
-# VMEM.  stats report per-dispatch kernel coverage (DESIGN.md §13).
+# The same program through the pluggable lowering backends (DESIGN.md §14):
+# backend='pallas' makes the scheduler's lower stage route each fused block
+# to the cheapest backend that claims it — expressible blocks become ONE
+# tiled Pallas kernel (contracted temporaries stay in VMEM), the rest run
+# on the XLA floor — and per-backend stats count where every block ran.
 with fresh_runtime(algorithm="greedy", backend="pallas") as rt:
     x = bh.random((N,))
     v = bh.random((N,))
@@ -49,7 +51,10 @@ with fresh_runtime(algorithm="greedy", backend="pallas") as rt:
 
     st = rt.executor.stats
     run = st["pallas_blocks"] + st["pallas_fallback_blocks"]
+    per_backend = ", ".join(f"{name}={n}" for name, n
+                            in st["backend_blocks"].items())
     print(f"\nbackend='pallas'  kinetic={result:12.2f}  "
           f"{st['pallas_blocks']}/{run} blocks in one Pallas kernel each "
           f"({st['pallas_blocks'] / max(1, run):.0%} coverage)")
+    print(f"blocks per backend: {per_backend}")
     print("fallback reasons:", st["pallas_fallbacks"] or "none")

@@ -12,6 +12,10 @@ from .cost import (BohriumCost, CommCost, CostModel,             # noqa: F401
 from .partition import PartitionState                            # noqa: F401
 from .algorithms import PartitionResult, partition               # noqa: F401
 from .cache import MergeCache, tape_signature                    # noqa: F401
+from .backends import (LoweringBackend, LoweringContext,         # noqa: F401
+                       LoweringDecision, LoweringPolicy,
+                       available_backends, get_backend,
+                       register_backend, select_lowering)
 from .executor import BlockExecutor, make_block_fn, block_io     # noqa: F401
 from .scheduler import BlockPlan, Schedule, Scheduler, plan_blocks  # noqa: F401
 from .dist import (DistBlockExecutor, ShardSpec,                 # noqa: F401

@@ -8,7 +8,7 @@ same operations hash identically (exactly Bohrium's behaviour)."""
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import List, Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 from .executor import block_signature
 from .ir import Op
@@ -25,27 +25,39 @@ def _shard_digest(tape: Sequence[Op]) -> Tuple:
 
 
 def tape_signature(tape: Sequence[Op], algorithm: str, cost_model: str,
-                   topology: Tuple = ()) -> Tuple:
+                   topology: Tuple = (), backends: Tuple = ()) -> Tuple:
     """Canonical merge-cache key.  ``topology`` is the executor's device/mesh
     identity (``dist.mesh.topology_key``): a partition computed under one
     device count must never be replayed under another once plans become
-    placement-dependent."""
-    return (algorithm, cost_model, tuple(topology), _shard_digest(tape),
-            block_signature(tape))
+    placement-dependent.  ``backends`` is the lowering policy's candidate
+    list (``LoweringPolicy.key()``): cached entries carry per-block backend
+    decisions, which are only valid for the stack that made them."""
+    return (algorithm, cost_model, tuple(topology), tuple(backends),
+            _shard_digest(tape), block_signature(tape))
 
 
 class MergeCache:
     """LRU: a steady mix of hot tapes (training step + eval step + logging
-    flush) stays resident even when one-off tapes churn past capacity."""
+    flush) stays resident even when one-off tapes churn past capacity.
+
+    Values are opaque to the cache; the scheduler stores ``(op_blocks,
+    lowering_decisions)`` tuples (immutable nested tuples) so a hit skips
+    both the partitioner (stage 3) and backend probing (stage 5)."""
 
     def __init__(self, capacity: int = 512):
         self.capacity = capacity
-        self._store: "OrderedDict[Tuple, List[List[int]]]" = OrderedDict()
+        self._store: "OrderedDict[Tuple, object]" = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
-    def get(self, key: Tuple) -> Optional[List[List[int]]]:
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: Tuple) -> bool:
+        return key in self._store      # no LRU touch, no hit/miss count
+
+    def get(self, key: Tuple):
         got = self._store.get(key)
         if got is None:
             self.misses += 1
@@ -54,13 +66,13 @@ class MergeCache:
             self._store.move_to_end(key)
         return got
 
-    def put(self, key: Tuple, op_blocks: List[List[int]]) -> None:
+    def put(self, key: Tuple, value) -> None:
         if key in self._store:
             self._store.move_to_end(key)
         elif len(self._store) >= self.capacity:
             self._store.popitem(last=False)   # evict least-recently-used
             self.evictions += 1
-        self._store[key] = [list(b) for b in op_blocks]
+        self._store[key] = value
 
     def clear(self) -> None:
         self._store.clear()

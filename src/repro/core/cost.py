@@ -50,6 +50,15 @@ class CostModel:
         merged = b1.merged_with(b2)
         return self.block_cost(b1) + self.block_cost(b2) - self.block_cost(merged)
 
+    def dispatch_price(self, n_dispatches: int) -> float:
+        """Price of ``n`` executable dispatches for one block — the
+        per-backend term the scheduler's lower stage minimizes when picking
+        a block's lowering backend (DESIGN.md §14).  Models with a
+        ``launch_s`` term (the ``tpu*`` family) price dispatches in
+        seconds, matching their partition-time ``_KernelAlignment``
+        pricing; abstract models price the dispatch count itself."""
+        return getattr(self, "launch_s", 1.0) * float(n_dispatches)
+
 
 class BohriumCost(CostModel):
     """Def. 13: sum over blocks of unique external accesses ``||ext[B]||``.

@@ -1,183 +1,28 @@
-"""DistBlockExecutor — stage 5 for multi-device plans (DESIGN.md §12).
+"""DistBlockExecutor — back-compat facade over the ``shard_map`` lowering
+backend (DESIGN.md §12, §14).
 
-Consumes exactly the same ``BlockPlan``s as ``BlockExecutor`` but lowers
-blocks that touch sharded bases through ``jax.shard_map`` over a 1-D device
-mesh: sharded bases enter as per-device chunks (``P(axis)`` on the flat
-buffer — dim-0 block sharding keeps chunks contiguous), replicated bases
-enter whole, and COMM ops become real collectives (``all_gather`` for
-allgather/ppermute resharding, shard-local slices for placement casts).
-Identical COMM ops inside one block execute as ONE collective — the
-executor realizes the elision the ``comm`` cost model priced.
-
-Blocks the shard tiler cannot express (strided/partial views, reductions,
-opaque ops, foreign shardings) and purely replicated blocks fall through to
-the inherited single-device path unchanged, so results are bit-identical to
-``BlockExecutor`` by construction.  Donation and the executable cache are
-inherited; the cache key additionally folds in each base's placement so one
-structural signature never serves two different shardings.
+The multi-device execution path used to live here as a ``BlockExecutor``
+subclass that intercepted ``_compile``.  It is now the ``shard_map``
+backend in ``repro.core.backends.shard_map`` — a peer the scheduler's
+lower stage selects per block — and ``BlockExecutor(mesh=...)`` is the
+real constructor: passing a mesh prepends ``shard_map`` to the backend
+stack, folds placement into the executable-cache key, and enables the
+collective/fabric-byte stats.  This class survives only so existing
+imports and ``DistBlockExecutor(mesh=...)`` call sites keep working; it
+adds nothing beyond defaulting the mesh to the host mesh.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
-
-from ..executor import (BlockExecutor, _BINARY, _UNARY, _base_meta, block_io)
-from ..ir import COMM_OPS, Op, View
-from .mesh import host_mesh, topology_key
-from .reshard import _comm_key, block_comm_bytes
-from .spec import placement_digest, spec_of
+from ..executor import BlockExecutor
+from .mesh import host_mesh
 
 
 class DistBlockExecutor(BlockExecutor):
-    """Multi-device stage 5: shard_map lowering with explicit collectives."""
+    """``BlockExecutor`` with a mesh (default: all local devices)."""
 
     def __init__(self, mesh=None, axis: Optional[str] = None, **kw):
-        super().__init__(**kw)
-        self.mesh = mesh if mesh is not None else host_mesh()
-        self.axis = axis or self.mesh.axis_names[0]
-        self.n_dev = int(np.prod(self.mesh.devices.shape))
-        self.stats.update({"shard_map_blocks": 0, "collectives": 0,
-                           "interconnect_bytes": 0.0})
-        self._sharded_keys: set = set()   # cache keys lowered via shard_map
-
-    def topology_key(self) -> Tuple:
-        return topology_key(self.mesh)
-
-    # -- executable-cache key: structure x placement -------------------
-    def _cache_key(self, ops: Sequence[Op], plan) -> Tuple:
-        return (plan.signature, placement_digest(ops))
-
-    # -- per-dispatch accounting ---------------------------------------
-    def _post_block(self, ops: Sequence[Op], plan) -> None:
-        """Collectives/fabric bytes are counted only for dispatches that
-        actually went through the shard_map lowering — on the fallback path
-        COMM ops execute as local identity copies and move nothing."""
-        if self._cache_key(ops, plan) not in self._sharded_keys:
-            return
-        n_comms = len({_comm_key(op) for op in ops if op.opcode in COMM_OPS})
-        if n_comms:
-            self.stats["collectives"] += n_comms
-            self.stats["interconnect_bytes"] += block_comm_bytes(ops)
-
-    # -- lowering -------------------------------------------------------
-    def _shard_specs(self, work: Sequence[Op]) -> Optional[Dict[int, object]]:
-        """Static eligibility check; returns {base uid: ShardSpec|None} when
-        the block is expressible as one shard_map program, else None."""
-        if not work:
-            return None
-        specs: Dict[int, object] = {}
-        any_sharded = False
-        for op in work:
-            oc = op.opcode
-            if oc not in _UNARY and oc not in _BINARY and oc != "where" \
-                    and oc not in COMM_OPS:
-                return None
-            for v in (*op.in_views(), *op.out_views()):
-                if not (v.offset == 0 and v.size == v.base.size
-                        and v.is_contiguous()):
-                    return None
-                s = spec_of(v.base)
-                if s is not None:
-                    if (s.sharded_dim != 0 or not s.divides()
-                            or s.n_shards != self.n_dev
-                            or v.base.size % self.n_dev != 0):
-                        return None
-                    any_sharded = True
-                specs[v.base.uid] = s
-        if not any_sharded:
-            return None
-        for op in work:          # replicated outputs need replicated inputs
-            if op.opcode in COMM_OPS:
-                continue
-            so = specs[op.out.base.uid]
-            for v in op.in_views():
-                si = specs[v.base.uid]
-                if si is not None and (so is None or si.placement_key()
-                                       != so.placement_key()):
-                    return None  # the reshard pass normally prevents this
-        return specs
-
-    def _compile_sharded(self, ops: Sequence[Op], plan) -> Optional[Tuple]:
-        work = [op for op in ops if not op.is_system()]
-        specs = self._shard_specs(work)
-        if specs is None:
-            return None
-        inputs, outputs, _ = block_io(ops)
-        meta = _base_meta(work)
-        n_dev, axis = self.n_dev, self.axis
-        chunk = {u: size // n_dev for u, (size, _) in meta.items()}
-
-        def shard_of(val, u):
-            idx = jax.lax.axis_index(axis)
-            return jax.lax.dynamic_slice_in_dim(val, idx * chunk[u], chunk[u])
-
-        def pershard(*bufs):
-            env: Dict[int, jnp.ndarray] = {u: b for u, b in zip(inputs, bufs)}
-            for u, (size, dt) in meta.items():
-                if u not in env:
-                    local = chunk[u] if specs.get(u) is not None else size
-                    env[u] = jnp.zeros((local,), dt)
-            issued: Dict[Tuple, jnp.ndarray] = {}
-            for op in work:
-                oc = op.opcode
-                ou = op.out.base.uid
-                size, dt = meta[ou]
-                if oc in COMM_OPS:
-                    key = _comm_key(op)
-                    val = issued.get(key)
-                    if val is None:           # ONE collective per identity
-                        su = op.in_views()[0].base.uid
-                        if oc == "comm_allgather":
-                            val = jax.lax.all_gather(env[su], axis, tiled=True)
-                        elif oc == "comm_ppermute":
-                            full = jax.lax.all_gather(env[su], axis, tiled=True)
-                            val = shard_of(full, ou)
-                        else:                 # reduce_scatter placement cast
-                            val = shard_of(env[su], ou)
-                        issued[key] = val
-                    env[ou] = val.astype(dt)
-                    continue
-                sharded_out = specs.get(ou) is not None
-                ins = []
-                for v in op.inputs:
-                    if not isinstance(v, View):
-                        ins.append(v)
-                        continue
-                    x = env[v.base.uid]
-                    if sharded_out and specs.get(v.base.uid) is None:
-                        x = shard_of(x, v.base.uid)   # replicated → my chunk
-                    ins.append(x)
-                if oc in _UNARY:
-                    val = _UNARY[oc](*ins)
-                elif oc in _BINARY:
-                    val = _BINARY[oc](*ins)
-                else:
-                    val = jnp.where(*ins)
-                local = chunk[ou] if sharded_out else size
-                env[ou] = jnp.broadcast_to(jnp.asarray(val, dt), (local,))
-            return tuple(env[u] for u in outputs)
-
-        pspec = lambda u: P(axis) if specs.get(u) is not None else P()  # noqa: E731
-        mapped = shard_map(pershard, mesh=self.mesh,
-                           in_specs=tuple(pspec(u) for u in inputs),
-                           out_specs=tuple(pspec(u) for u in outputs),
-                           check_rep=False)
-        fn = lambda *a: mapped(*a[:-1])       # noqa: E731  (drop RNG salts)
-        donate = plan.donatable if self.jit and self.donation_enabled() else ()
-        if self.jit:
-            fn = jax.jit(fn, donate_argnums=donate)
-        self.stats["shard_map_blocks"] += 1
-        self._sharded_keys.add(self._cache_key(ops, plan))
-        return fn, bool(donate), None
-
-    def _compile(self, ops: Sequence[Op], plan) -> Tuple:
-        lowered = self._compile_sharded(ops, plan)
-        if lowered is not None:
-            return lowered
-        return super()._compile(ops, plan)
+        super().__init__(mesh=mesh if mesh is not None else host_mesh(),
+                         axis=axis, **kw)

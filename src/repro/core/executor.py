@@ -2,21 +2,23 @@
 phase: "the hardware specific backend JIT-compiles each block of array
 operations and executes them").
 
-Each partition block becomes ONE jitted JAX function: `ext` arrays cross the
-block boundary as function inputs/outputs (exactly the paper's cost), while
-contracted arrays (``new∩del``) are local temporaries that XLA keeps in
-registers — array contraction.  On TPU, same-domain elementwise blocks are
-additionally lowered through the Pallas ``fused_block`` kernel
-(`repro.kernels.fused_block`) so contraction happens in VMEM.
+Each partition block becomes ONE executable: `ext` arrays cross the block
+boundary as function inputs/outputs (exactly the paper's cost), while
+contracted arrays (``new∩del``) are local temporaries that never leave fast
+memory — array contraction.  *Which* executable a block becomes is a
+per-block lowering decision over the pluggable backend registry
+(``repro.core.backends``, DESIGN.md §14): ``xla`` (the ``make_block_fn``
+floor below), ``pallas`` (the tiled fused-block codegen) or ``shard_map``
+(multi-device collectives).  ``BlockExecutor`` is the thin dispatch engine
+over that registry.
 
-Compiled block functions are cached on a canonical structural signature, so
-iterative workloads (the paper's merge-cache scenario, §IV-F) re-dispatch
-the same executables every iteration.
+Compiled block functions are cached on ``(backend, canonical structural
+signature)``, so iterative workloads (the paper's merge-cache scenario,
+§IV-F) re-dispatch the same executables every iteration.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -273,57 +275,148 @@ def block_signature(ops: Sequence[Op]) -> Tuple:
     return tuple(sig)
 
 
+def stats_delta(before: Dict, after: Dict) -> Dict:
+    """Recursive ``after - before`` over (possibly nested) numeric stat
+    dicts — the per-flush delta ``Runtime.flush`` records into history."""
+    out: Dict = {}
+    for k, v in after.items():
+        if isinstance(v, dict):
+            out[k] = stats_delta(before.get(k, {}), v)
+        else:
+            out[k] = v - before.get(k, 0)
+    return out
+
+
 class BlockExecutor:
-    """Stage 5 of the scheduler pipeline: executes a ``Schedule`` against a
-    buffer store, caching compiled block executables across flushes (the
-    runtime-JIT part of §IV-F).
+    """Stage 5 of the scheduler pipeline: a thin async dispatch engine over
+    the lowering-backend registry (``repro.core.backends``, DESIGN.md §14).
+
+    Each work block dispatches on the backend its ``BlockPlan.lowering``
+    decision names (annotated by the scheduler's lower stage; decided here
+    on the fly for legacy un-lowered schedules).  The engine owns what is
+    common to every backend: the executable cache keyed by ``(backend,
+    signature)`` (plus placement on a mesh), ``jax.jit`` wrapping, input
+    donation for backends that opt in, RNG-salt plumbing, and uniform
+    per-backend stats.
 
     Dispatch is asynchronous: nothing in the block loop forces a host sync,
     so block k+1 is enqueued while block k still runs on device; results
     only materialize at an explicit SYNC (``Runtime.materialize``).  When
-    the backend supports buffer donation (GPU/TPU), inputs whose base dies
+    the platform supports buffer donation (GPU/TPU), inputs whose base dies
     inside the block are passed through ``jax.jit(donate_argnums=...)`` so
     XLA reuses their memory for the block's outputs."""
 
     def __init__(self, seed: int = 0, jit: bool = True,
-                 backend: str = "xla", donate="auto"):
-        """backend='pallas' lowers fusible elementwise blocks through the
-        Pallas fused_block kernel generator (interpret mode on CPU; compiled
-        on TPU) with automatic XLA fallback for unsupported blocks.
-        donate='auto' enables input donation on backends that implement it
-        (GPU/TPU); True forces it, False disables it."""
+                 backend="xla", donate="auto", mesh=None,
+                 axis: Optional[str] = None):
+        """``backend`` resolves to the preference-ordered candidate list of
+        the lowering policy (``backends.default_stack``): ``"xla"`` runs
+        everything as jitted XLA programs; ``"pallas"`` prefers the tiled
+        fused-block Pallas codegen with per-reason XLA fallback; a
+        tuple/list names an explicit stack.  ``mesh`` (a 1-D
+        ``jax.sharding.Mesh``) prepends the ``shard_map`` backend so
+        sharded blocks run with real collectives.  donate='auto' enables
+        input donation on platforms that implement it (GPU/TPU); True
+        forces it, False disables it."""
+        from .backends import default_stack
         self.seed = seed
         self.jit = jit
-        self.backend = backend
+        self.backend = backend            # policy shorthand, kept for repr
         self.donate = donate
+        self.mesh = mesh
+        if mesh is not None:
+            self.axis = axis or mesh.axis_names[0]
+            self.n_dev = int(np.prod(mesh.devices.shape))
+        else:
+            self.axis = axis
+            self.n_dev = 1
+        self.backends: Tuple[str, ...] = default_stack(backend, mesh)
         self._cache: Dict[Tuple, Tuple] = {}
+        self._decisions: Dict[Tuple, object] = {}
         self._empty_salts = None
         self.sync_store: Dict[int, jnp.ndarray] = {}
-        #: With ``backend='pallas'``, every dispatched work block counts
-        #: either into ``pallas_blocks`` (lowered through the fused-block
-        #: codegen) or into ``pallas_fallback_blocks``, with the per-reason
-        #: breakdown in ``pallas_fallbacks`` (reason slug -> count; see
-        #: ``repro.kernels.fused_block.codegen.REASONS`` and DESIGN.md §13).
-        #: Counters are per-dispatch, so ``pallas_blocks /
-        #: (pallas_blocks + pallas_fallback_blocks)`` is the kernel
-        #: coverage of the executed schedule.
-        self.stats = {"blocks_run": 0, "exec_cache_hits": 0,
-                      "exec_cache_misses": 0, "pallas_blocks": 0,
-                      "pallas_fallback_blocks": 0, "pallas_fallbacks": {},
-                      "donated_buffers": 0}
+        self.stats = self._fresh_stats()
 
+    # -- stats ---------------------------------------------------------
+    def _fresh_stats(self) -> Dict:
+        """Zeroed counters.  ``backend_blocks[name]`` counts dispatches per
+        backend; ``backend_fallbacks[name][reason]`` counts, per backend
+        the policy preferred over the one that ran, why it declined.  The
+        legacy ``pallas_*`` aliases keep their historical meaning: every
+        dispatched work block under a pallas-bearing policy lands either in
+        ``pallas_blocks`` or in ``pallas_fallback_blocks`` with the reason
+        slug counted in ``pallas_fallbacks`` (``codegen.REASONS``,
+        DESIGN.md §13), so ``pallas_blocks / (pallas_blocks +
+        pallas_fallback_blocks)`` is the executed kernel coverage."""
+        st: Dict = {"blocks_run": 0, "exec_cache_hits": 0,
+                    "exec_cache_misses": 0, "donated_buffers": 0,
+                    "pallas_blocks": 0, "pallas_fallback_blocks": 0,
+                    "pallas_fallbacks": {},
+                    "backend_blocks": {n: 0 for n in self.backends},
+                    "backend_fallbacks": {n: {} for n in self.backends}}
+        if "shard_map" in self.backends:
+            st.update({"shard_map_blocks": 0, "collectives": 0,
+                       "interconnect_bytes": 0.0})
+        return st
+
+    def reset_stats(self) -> None:
+        """Zero every counter (compiled executables and cached lowering
+        decisions are kept — resetting is observation, not state)."""
+        self.stats = self._fresh_stats()
+
+    def snapshot_stats(self) -> Dict:
+        """Deep copy of the counters, for before/after flush deltas."""
+        import copy
+        return copy.deepcopy(self.stats)
+
+    # -- policy --------------------------------------------------------
     def donation_enabled(self) -> bool:
         if self.donate == "auto":
             return jax.default_backend() in ("gpu", "tpu", "cuda", "rocm")
         return bool(self.donate)
 
-    # -- subclass seams (DistBlockExecutor) ----------------------------
-    def _cache_key(self, ops: Sequence[Op], plan) -> Tuple:
-        """Executable-cache key for one plan; subclasses fold in placement."""
-        return plan.signature
+    def lowering_context(self):
+        from .backends import LoweringContext
+        # Pallas interpret mode everywhere except a real TPU, where blocks
+        # compile to Mosaic kernels.
+        return LoweringContext(seed=self.seed, jit=self.jit,
+                               interpret=jax.default_backend() != "tpu",
+                               mesh=self.mesh, axis=self.axis,
+                               n_dev=self.n_dev)
 
-    def _post_block(self, ops: Sequence[Op], plan) -> None:
-        """Per-dispatch accounting hook (no-op on the single-device path)."""
+    def lowering_policy(self):
+        """What ``Runtime.flush`` hands ``Scheduler.plan`` so the lower
+        stage decides per block which of this executor's backends runs it."""
+        from .backends import LoweringPolicy
+        return LoweringPolicy(backends=self.backends,
+                              ctx=self.lowering_context())
+
+    def topology_key(self) -> Tuple:
+        """Device/mesh identity mixed into the merge-cache key (empty on a
+        single-device executor)."""
+        if self.mesh is None:
+            return ()
+        from .dist.mesh import topology_key
+        return topology_key(self.mesh)
+
+    def _cache_key(self, ops: Sequence[Op], plan,
+                   backend: Optional[str] = None, ctx=None) -> Tuple:
+        """Executable-cache key: backend name x structural signature, plus
+        whatever extra identity the backend's ``cache_token`` declares (the
+        shard_map backend folds in per-base placement so one signature
+        never serves two shardings).  With ``backend=None`` the key indexes
+        the dispatch-time *decision* cache instead, which is placement-
+        dependent on a mesh regardless of the backend chosen."""
+        key: Tuple = (backend, plan.signature)
+        if backend is not None:
+            from .backends import get_backend
+            return key + tuple(get_backend(backend).cache_token(
+                ops, plan, ctx if ctx is not None
+                else self.lowering_context()))
+        if self.mesh is not None:
+            from .dist.spec import placement_digest
+            key += (placement_digest(ops),)
+        return key
 
     def run(self, tape: Sequence[Op], op_blocks: Sequence[Sequence[int]],
             buffers: Dict[int, jnp.ndarray]) -> None:
@@ -333,64 +426,101 @@ class BlockExecutor:
                                    blocks=plan_blocks(tape, op_blocks)),
                           buffers)
 
-    def _compile(self, ops: Sequence[Op], plan) -> Tuple:
-        """Build (and jit) the executable for one block plan.  Returns
-        ``(fn, donates, lower)`` — ``donates`` records whether the
-        executable was compiled with ``donate_argnums`` (feeds the per-run
-        stat); ``lower`` is ``"pallas"`` when the block lowered through the
-        fused-block codegen, a fallback reason slug when ``backend='pallas'``
-        had to fall back to XLA, and ``None`` on the plain XLA backend."""
-        lower = None
-        if self.backend == "pallas":
-            from ..kernels.fused_block.ops import fused_block_fn
-            fn, fins, fouts, reason = fused_block_fn(ops, seed=self.seed)
-            if reason is None:
-                assert tuple(fins) == plan.inputs and tuple(fouts) == plan.outputs
-                if self.jit:
-                    fn = jax.jit(fn)
-                return fn, False, "pallas"
-            lower = reason
-        fn, fins, fouts = make_block_fn(ops, seed=self.seed)
-        assert tuple(fins) == plan.inputs and tuple(fouts) == plan.outputs
-        donate = plan.donatable if self.jit and self.donation_enabled() else ()
+    # -- dispatch ------------------------------------------------------
+    def _decide(self, ops: Sequence[Op], plan, ctx):
+        """Lowering decision for a plan the scheduler did not annotate
+        (legacy ``run``/hand-built schedules) — same selection rule, cached
+        so steady-state dispatches skip the probing."""
+        from .backends import select_lowering
+        key = self._cache_key(ops, plan)
+        d = self._decisions.get(key)
+        if d is None:
+            d = select_lowering(ops, plan, self.backends, ctx)
+            self._decisions[key] = d
+        return d
+
+    def _executable(self, decision, ops: Sequence[Op], plan, ctx) -> Tuple:
+        """Look up (or build) the jitted executable for one decided plan.
+        Returns ``(fn, donates, decision)`` — the stored decision may
+        differ from the requested one if the chosen backend's builder
+        failed and the block degraded to XLA (reason ``"error"``)."""
+        from .backends import LoweringDecision, get_backend
+        key = self._cache_key(ops, plan, backend=decision.backend, ctx=ctx)
+        cached = self._cache.get(key)
+        if cached is not None:
+            self.stats["exec_cache_hits"] += 1
+            return cached
+        self.stats["exec_cache_misses"] += 1
+        be = get_backend(decision.backend)
+        try:
+            fn = be.build(ops, plan, ctx)
+        except Exception:
+            if decision.backend == "xla":
+                raise           # the floor backend must not fail silently
+            # builder bug: degrade to the XLA floor, not a crash
+            decision = LoweringDecision(
+                backend="xla",
+                declined=decision.declined + ((decision.backend, "error"),))
+            be = get_backend("xla")
+            fn = be.build(ops, plan, ctx)
+        donate = (plan.donatable if self.jit and be.donates
+                  and self.donation_enabled() else ())
         if self.jit:
             fn = jax.jit(fn, donate_argnums=donate)
-        return fn, bool(donate), lower
+        entry = (fn, bool(donate), decision)
+        self._cache[key] = entry
+        return entry
+
+    def _account(self, decision, plan, donates: bool) -> None:
+        """Uniform per-dispatch stats plus the legacy aliases."""
+        st = self.stats
+        st["blocks_run"] += 1
+        bb = st["backend_blocks"]
+        bb[decision.backend] = bb.get(decision.backend, 0) + 1
+        for name, reason in decision.declined:
+            fr = st["backend_fallbacks"].setdefault(name, {})
+            fr[reason] = fr.get(reason, 0) + 1
+        if decision.backend == "pallas":
+            st["pallas_blocks"] += 1
+        else:
+            pr = decision.reason_for("pallas")
+            if pr is not None:
+                st["pallas_fallback_blocks"] += 1
+                fb = st["pallas_fallbacks"]
+                fb[pr] = fb.get(pr, 0) + 1
+        if decision.backend == "shard_map":
+            st["shard_map_blocks"] = st.get("shard_map_blocks", 0) + 1
+        if donates:
+            st["donated_buffers"] += len(plan.donatable)
 
     def run_schedule(self, schedule, buffers: Dict[int, jnp.ndarray]) -> None:
-        """Dispatch a planned flush (stage 5) against the buffer store.
+        """Dispatch a planned flush (stage 6) against the buffer store.
 
         ``schedule`` is the :class:`repro.core.scheduler.Schedule` produced
         by ``Scheduler.plan``; ``buffers`` maps base uid -> flat device
         buffer and is updated in place with each block's outputs.  Per
-        block: look up (or compile) the executable under its structural
-        signature, feed the external input buffers plus the RNG salts, then
-        honor SYNC (snapshot into ``sync_store``) and DEL (free) in Bohrium
-        order.  Dispatch is async — nothing here blocks on device results."""
+        block: take the plan's lowering decision (or decide now), look up
+        (or compile) the executable under ``(backend, signature)``, feed
+        the external input buffers plus the RNG salts, then honor SYNC
+        (snapshot into ``sync_store``) and DEL (free) in Bohrium order.
+        Dispatch is async — nothing here blocks on device results."""
+        from .backends import get_backend
         tape = schedule.tape
+        ctx = self.lowering_context()
         if self._empty_salts is None:
             self._empty_salts = jnp.zeros((0,), dtype=jnp.int32)
         for plan in schedule.blocks:
             ops = [tape[i] for i in plan.op_indices]
             if plan.has_work:
-                key = self._cache_key(ops, plan)
-                cached = self._cache.get(key)
+                decision = getattr(plan, "lowering", None)
+                if decision is None:
+                    decision = self._decide(ops, plan, ctx)
                 # plan inputs/outputs are uid lists of THIS flush; the
                 # canonical signature guarantees positional correspondence
                 # with the cached executable across flushes.
-                if cached is None:
-                    fn, donates, lower = self._compile(ops, plan)
-                    self._cache[key] = (fn, donates, lower)
-                    self.stats["exec_cache_misses"] += 1
-                else:
-                    fn, donates, lower = cached
-                    self.stats["exec_cache_hits"] += 1
-                if lower == "pallas":
-                    self.stats["pallas_blocks"] += 1
-                elif lower is not None:
-                    self.stats["pallas_fallback_blocks"] += 1
-                    fb = self.stats["pallas_fallbacks"]
-                    fb[lower] = fb.get(lower, 0) + 1
+                fn, donates, decision = self._executable(
+                    decision, ops, plan, ctx)
+                self._account(decision, plan, donates)
                 in_bufs = []
                 for u in plan.inputs:
                     if u not in buffers:
@@ -404,10 +534,8 @@ class BlockExecutor:
                 out_bufs = fn(*in_bufs, salts)
                 for u, b in zip(plan.outputs, out_bufs):
                     buffers[u] = b
-                self.stats["blocks_run"] += 1
-                if donates:
-                    self.stats["donated_buffers"] += len(plan.donatable)
-                self._post_block(ops, plan)
+                get_backend(decision.backend).post_dispatch(
+                    ops, plan, ctx, self.stats)
             for op in ops:   # SYNC snapshots before DEL frees (Bohrium order)
                 for b in op.sync_bases:
                     if b.uid in buffers:

@@ -12,6 +12,7 @@ via explicit ``.delete()``.
 from __future__ import annotations
 
 import contextlib
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -51,20 +52,26 @@ class Runtime:
     seed : base PRNG seed for ``random`` ops (per-op salts keep draws
         partition-invariant).
     jit : wrap each block executable in ``jax.jit`` (disable to debug).
-    backend : ``"xla"`` executes blocks as jitted XLA programs;
-        ``"pallas"`` additionally lowers expressible blocks through the
-        fused-block Pallas codegen (one tiled kernel per block, automatic
-        per-reason fallback — DESIGN.md §13).
+    backend : lowering-backend policy (``repro.core.backends``, DESIGN.md
+        §14).  ``"xla"`` executes every block as a jitted XLA program;
+        ``"pallas"`` prefers the fused-block Pallas codegen (one tiled
+        kernel per block) with per-reason XLA fallback (DESIGN.md §13); a
+        tuple/list names an explicit preference-ordered backend stack.  The
+        scheduler's lower stage picks a backend per block, so one flush may
+        mix backends.
     donate : buffer-donation policy (``"auto"``/``True``/``False``) for
         inputs whose base dies inside a block.
-    mesh : optional ``jax.sharding.Mesh``; selects the distributed executor
-        (``repro.core.dist``) and enables the resharding pass.
+    mesh : optional ``jax.sharding.Mesh``; prepends the ``shard_map``
+        backend (real collectives for sharded blocks) and enables the
+        resharding pass.
+    history_limit : cap on ``Runtime.history`` entries (bounded deque, so
+        long-lived serving processes don't grow memory without bound).
     """
 
     def __init__(self, algorithm: str = "greedy", cost_model: str = "bohrium",
                  use_cache: bool = True, node_budget: int = 100_000,
-                 seed: int = 0, jit: bool = True, backend: str = "xla",
-                 donate="auto", mesh=None):
+                 seed: int = 0, jit: bool = True, backend="xla",
+                 donate="auto", mesh=None, history_limit: int = 1024):
         self.algorithm = algorithm
         self.cost_model = cost_model
         self.use_cache = use_cache
@@ -73,14 +80,8 @@ class Runtime:
         self.buffers: Dict[int, jnp.ndarray] = {}
         self.scheduler = Scheduler(MergeCache())
         self.cache = self.scheduler.cache
-        if mesh is not None:
-            # distributed stage 5: same plans, shard_map lowering
-            from .dist import DistBlockExecutor
-            self.executor = DistBlockExecutor(mesh=mesh, seed=seed, jit=jit,
-                                              backend=backend, donate=donate)
-        else:
-            self.executor = BlockExecutor(seed=seed, jit=jit, backend=backend,
-                                          donate=donate)
+        self.executor = BlockExecutor(seed=seed, jit=jit, backend=backend,
+                                      donate=donate, mesh=mesh)
         self._known: set = set()
         self._refcount: Dict[int, int] = {}
         self._bases: Dict[int, BaseArray] = {}
@@ -88,7 +89,9 @@ class Runtime:
         self._ordinal = 0            # runtime-local op counter (RNG salts)
         self.flushes = 0
         self.last_partition: Optional[PartitionResult] = None
-        self.history: List[Dict] = []
+        #: per-flush records: planning stats plus an ``"exec"`` dict of
+        #: per-flush executor stat deltas (NOT cumulative totals)
+        self.history: "deque[Dict]" = deque(maxlen=history_limit)
 
     # -- recording -----------------------------------------------------
     def record(self, op: Op) -> None:
@@ -136,21 +139,25 @@ class Runtime:
                 # BEFORE partitioning, so WSP prices interconnect traffic
                 tape = insert_resharding(tape)
             topo_fn = getattr(self.executor, "topology_key", None)
-            sched = self.scheduler.plan(tape, algorithm=self.algorithm,
-                                        cost_model=self.cost_model,
-                                        node_budget=self.node_budget,
-                                        use_cache=self.use_cache,
-                                        topology=topo_fn() if topo_fn else ())
+            sched = self.scheduler.plan(
+                tape, algorithm=self.algorithm,
+                cost_model=self.cost_model,
+                node_budget=self.node_budget,
+                use_cache=self.use_cache,
+                topology=topo_fn() if topo_fn else (),
+                lowering=self.executor.lowering_policy())
             if sched.result is not None:
                 self.last_partition = sched.result
-                self.history.append({"cost": sched.result.cost,
-                                     "n_ops": len(tape),
-                                     "n_blocks": sched.result.n_blocks,
-                                     "cached": False, **sched.stats})
+                entry = {"cost": sched.result.cost, "n_ops": len(tape),
+                         "n_blocks": sched.result.n_blocks,
+                         "cached": False, **sched.stats}
             else:
-                self.history.append({"n_ops": len(tape), "cached": True,
-                                     **sched.stats})
+                entry = {"n_ops": len(tape), "cached": True, **sched.stats}
+            before = self.executor.snapshot_stats()
             self.executor.run_schedule(sched, self.buffers)
+            from .executor import stats_delta
+            entry["exec"] = stats_delta(before, self.executor.stats)
+            self.history.append(entry)
             self._known = set()
             self.flushes += 1
         finally:

@@ -1,6 +1,7 @@
-"""Staged scheduler pipeline: trace → graph → partition → schedule → execute.
+"""Staged scheduler pipeline: trace → graph → partition → schedule → lower
+→ execute.
 
-This module is the explicit spine of the runtime (DESIGN.md §7).  The five
+This module is the explicit spine of the runtime (DESIGN.md §7).  The six
 stages and their owners:
 
 1. **trace**     — ``repro.core.lazy.Runtime`` records array bytecode.
@@ -13,32 +14,41 @@ stages and their owners:
    external inputs/outputs, contracted temporaries, executable-cache
    signature and *donatable* input positions (buffers whose base dies
    inside the block and can be donated to XLA for in-place reuse).
-5. **execute**   — ``executor.BlockExecutor.run_schedule`` dispatches the
+5. **lower**     — each ``BlockPlan`` is annotated with a ``lowering``
+   decision: which registered backend (``repro.core.backends``, DESIGN.md
+   §14) runs the block, chosen by querying backend expressibility and the
+   cost model's per-backend dispatch price — so one flush can mix
+   pallas/xla/shard_map blocks and the executed schedule matches what the
+   cost model priced.
+6. **execute**   — ``executor.BlockExecutor.run_schedule`` dispatches the
    plans asynchronously against the buffer store.
 
 The ``Schedule`` object is the seam between the partitioner and the
 executor, and the distributed subsystem (``repro.core.dist``, DESIGN.md §12)
-now plugs in exactly here: the resharding pass runs on the tape before
-stage 2 (so COMM ops are ordinary graph nodes the partitioner prices via
-the ``comm`` cost model), ``plan`` mixes the executor's device/mesh
-``topology`` into the merge-cache key, and ``DistBlockExecutor`` consumes
-the very same ``BlockPlan``s — lowering multi-device blocks through
-``jax.shard_map`` with explicit collectives while single-device plans fall
-through to ``BlockExecutor`` unchanged.
+plugs in exactly here: the resharding pass runs on the tape before stage 2
+(so COMM ops are ordinary graph nodes the partitioner prices via the
+``comm`` cost model), ``plan`` mixes the executor's device/mesh
+``topology`` into the merge-cache key, and the ``shard_map`` backend claims
+multi-device blocks in stage 5 — lowering them through ``jax.shard_map``
+with explicit collectives while other blocks run on ``pallas``/``xla``
+unchanged.
 
-Stage 3 is skipped on a merge-cache hit (§IV-F): the cache maps a canonical
-tape signature to the block structure, so iterative programs pay the
-partition cost once and only re-run the cheap linear schedule stage.
+Stages 3 and 5 are skipped on a merge-cache hit (§IV-F): the cache maps a
+canonical tape signature (+ lowering policy) to the block structure AND the
+per-block lowering decisions, so iterative programs pay the partition and
+backend-probing costs once and only re-run the cheap linear schedule stage.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .algorithms import PartitionResult, partition
+from .backends import LoweringDecision, LoweringPolicy, select_lowering
 from .cache import MergeCache, tape_signature
+from .cost import make_cost_model
 from .executor import block_dead_bases, block_io, block_signature
 from .ir import Op
 
@@ -54,6 +64,8 @@ class BlockPlan:
     donatable: Tuple[int, ...]     # positions in `inputs` whose buffer dies
     signature: Tuple               # executable-cache key (structural)
     has_work: bool                 # False for DEL/SYNC-only blocks
+    #: stage-5 decision (None until lowered / for DEL/SYNC-only blocks)
+    lowering: Optional[LoweringDecision] = None
 
 
 @dataclass
@@ -92,44 +104,80 @@ def plan_blocks(tape: Sequence[Op],
     return plans
 
 
+def lower_plans(tape: Sequence[Op], plans: Sequence[BlockPlan],
+                policy: LoweringPolicy,
+                cost_model) -> Tuple[Optional[LoweringDecision], ...]:
+    """Stage 5: decide, per work block, which backend runs it.
+
+    For each plan the policy's candidate backends are asked to claim the
+    block; claimants are priced via ``cost_model.dispatch_price`` over
+    their dispatch counts and the cheapest wins (preference order breaking
+    ties) — see ``backends.select_lowering``.  Returns one decision per
+    plan (``None`` for DEL/SYNC-only blocks), aligned with ``plans``."""
+    return tuple(
+        select_lowering([tape[i] for i in p.op_indices], p,
+                        policy.backends, policy.ctx, cost_model)
+        if p.has_work else None
+        for p in plans)
+
+
 class Scheduler:
-    """Owns stages 2–4 and the merge cache; policy arrives per call so the
-    Runtime can retarget algorithm/cost model between flushes."""
+    """Owns stages 2–5 and the merge cache; policy arrives per call so the
+    Runtime can retarget algorithm/cost model/backends between flushes."""
 
     def __init__(self, cache: Optional[MergeCache] = None):
         self.cache = cache if cache is not None else MergeCache()
 
     def plan(self, tape: Sequence[Op], *, algorithm: str = "greedy",
              cost_model: str = "bohrium", node_budget: int = 100_000,
-             use_cache: bool = True, topology: Tuple = ()) -> Schedule:
-        """Stages 2–4: turn a recorded tape into an executable ``Schedule``.
+             use_cache: bool = True, topology: Tuple = (),
+             lowering: Optional[LoweringPolicy] = None) -> Schedule:
+        """Stages 2–5: turn a recorded tape into an executable ``Schedule``.
 
         Builds the WSP graph, partitions it under ``cost_model`` with
-        ``algorithm`` (skipped entirely on a merge-cache hit keyed by the
-        canonical tape signature + policy + ``topology``), then lowers the
-        block lists into ordered :class:`BlockPlan`s.  ``topology`` is the
-        executor's device/mesh key so cached partitions are never reused
-        across different placements.  The returned ``Schedule.result`` is
-        ``None`` on a cache hit; ``Schedule.stats`` carries per-stage
-        timings."""
+        ``algorithm``, lowers the block lists into ordered
+        :class:`BlockPlan`s, and — when the executor's ``lowering`` policy
+        is given — annotates each work block with its backend decision
+        (stage 5).  ``topology`` is the executor's device/mesh key so
+        cached partitions are never reused across different placements;
+        the policy's backend names are part of the key too, so decisions
+        made for one backend stack never leak into another.  On a
+        merge-cache hit both the partition AND the lowering decisions are
+        replayed — steady-state flushes skip partitioning and backend
+        probing alike (``Schedule.result`` is ``None`` on a hit).
+        ``Schedule.stats`` carries per-stage timings."""
         stats: Dict[str, float] = {}
-        blocks: Optional[List[List[int]]] = None
+        blocks: Optional[Tuple[Tuple[int, ...], ...]] = None
+        decisions: Optional[Tuple] = None
         key: Optional[Tuple] = None
+        cached = False
         if use_cache:
             key = tape_signature(tape, algorithm, cost_model,
-                                 topology=topology)
-            blocks = self.cache.get(key)
+                                 topology=topology,
+                                 backends=lowering.key() if lowering else ())
+            entry = self.cache.get(key)
+            if entry is not None:
+                blocks, decisions = entry
+                cached = True
         result = None
         if blocks is None:
             result = partition(tape, algorithm=algorithm,
                                cost_model=cost_model,
                                node_budget=node_budget)
-            blocks = result.op_blocks()
-            if use_cache:
-                self.cache.put(key, blocks)
+            blocks = tuple(tuple(b) for b in result.op_blocks())
             stats.update(result.stats)
         t0 = time.perf_counter()
         plans = plan_blocks(tape, blocks)
         stats["t_schedule_s"] = time.perf_counter() - t0
+        if lowering is not None:
+            t0 = time.perf_counter()
+            if decisions is None:
+                decisions = lower_plans(tape, plans, lowering,
+                                        make_cost_model(cost_model))
+            plans = [replace(p, lowering=d) if d is not None else p
+                     for p, d in zip(plans, decisions)]
+            stats["t_lower_s"] = time.perf_counter() - t0
+        if use_cache and not cached:
+            self.cache.put(key, (blocks, decisions))
         return Schedule(tape=list(tape), blocks=plans, result=result,
                         stats=stats)

@@ -1,8 +1,13 @@
 """Public wrapper around the fused-block Pallas codegen, with automatic
 fallback to the XLA per-block path (``make_block_fn``) for the blocks the
 tiler cannot express.  The returned ``reason`` tells the caller *why* a
-block fell back (``None`` means the Pallas kernel is used); the executor
-aggregates these into per-reason stats counters (DESIGN.md §13)."""
+block fell back (``None`` means the Pallas kernel is used).
+
+The runtime no longer dispatches through this wrapper: the ``pallas``
+lowering backend (``repro.core.backends.pallas``, DESIGN.md §14) calls
+``build_block_kernel`` directly and the scheduler's lower stage handles
+fallback selection and per-reason stats.  This facade remains the
+convenient claim-or-fallback entry point for tests and standalone use."""
 
 from __future__ import annotations
 
