@@ -1,6 +1,20 @@
-"""Canonical perf snapshot — one JSON artifact per commit (ISSUE 4).
+"""Canonical perf snapshot — one JSON artifact per commit (ISSUE 4), plus
+the CI perf-regression gate (ISSUE 5).
 
     PYTHONPATH=src python benchmarks/run_all.py --json BENCH_4.json [--quick]
+    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_4.json \\
+        --compare BENCH_4.json --tolerance 0.25      # gate vs the baseline
+
+``--compare`` loads a baseline snapshot (BEFORE overwriting ``--json``) and
+fails the run when any gated metric regresses past ``--tolerance``:
+
+* partition-scaling graph+partition seconds per (family, size) row may not
+  exceed ``base*(1+tol)`` plus a small absolute slack (CI timers are noisy
+  on sub-100ms rows), with the baseline scaled to this machine's speed via
+  the snapshots' ``machine_ref_s`` pure-Python reference measurement;
+* aggregate kernel coverage may not drop below ``base*(1-tol)``;
+* per-program comm-bytes savings (``1 - fused/unfused``) may not drop
+  below ``base*(1-tol)`` minus a 2-point absolute slack.
 
 Aggregates the three benchmark families that gate this repo into a single
 machine-readable snapshot, seeding the bench trajectory (CI runs this and
@@ -109,13 +123,110 @@ def snap_mixed_lowering() -> Dict:
     return out
 
 
+def _savings(row: Dict) -> float:
+    bu, bf = row.get("bytes_singleton", 0.0), row.get("bytes_greedy", 0.0)
+    return (1.0 - bf / bu) if bu else 0.0
+
+
+# absolute slacks under the relative tolerance: CI wall-clock noise can be
+# tens of milliseconds on rows that only take tens of milliseconds, and
+# comm savings are quantized by collective counts on tiny meshes.
+TIME_SLACK_S = 0.1
+SAVINGS_SLACK = 0.02
+
+
+def machine_ref_s() -> float:
+    """Seconds for a fixed pure-Python dict/set workload (~0.1s here).
+
+    Stored in every snapshot; the time gate scales the baseline's
+    partition times by ``snap_ref / base_ref`` so a baseline captured on
+    one machine gates runs on another (CI runners are routinely 2x slower
+    than an authoring workstation — without normalization every absolute
+    wall-clock comparison across machines is a false alarm).  Pure Python
+    on purpose: graph build + partition time is dict/set bound, not BLAS
+    bound.  Minimum of three runs de-noises scheduler jitter."""
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        d: Dict[int, int] = {}
+        acc = 0
+        for i in range(400_000):
+            d[i] = i
+            if i % 3 == 0:
+                acc += d.pop(i - 1, 0)
+            if i % 7 == 0:
+                acc ^= hash((i, acc))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def compare_snapshots(snap: Dict, base: Dict, tolerance: float) -> List[str]:
+    """Return a list of human-readable regressions of ``snap`` vs ``base``
+    (empty = gate passes).  Gated metrics: partition-scaling time, kernel
+    coverage, comm-bytes savings — the three headline numbers of PRs 1-3."""
+    fails: List[str] = []
+    # machine normalization: scale the baseline's times to this machine's
+    # speed when both snapshots carry the reference measurement
+    ratio = 1.0
+    if snap.get("machine_ref_s") and base.get("machine_ref_s"):
+        ratio = snap["machine_ref_s"] / base["machine_ref_s"]
+    base_rows = {(r["family"], r["n_ops"]): r
+                 for r in base.get("partition_scaling", [])}
+    for r in snap.get("partition_scaling", []):
+        b = base_rows.get((r["family"], r["n_ops"]))
+        if b is None:
+            continue
+        t_new = r["t_graph_s"] + r["t_partition_s"]
+        t_old = (b["t_graph_s"] + b["t_partition_s"]) * ratio
+        limit = t_old * (1.0 + tolerance) + TIME_SLACK_S
+        if t_new > limit:
+            fails.append(
+                f"partition_scaling/{r['family']}/{r['n_ops']}ops: "
+                f"{t_new:.3f}s > {limit:.3f}s (base {t_old:.3f}s)")
+    cov_new = snap.get("kernel_coverage", {}).get("coverage")
+    cov_old = base.get("kernel_coverage", {}).get("coverage")
+    if cov_new is not None and cov_old is not None:
+        floor = cov_old * (1.0 - tolerance)
+        if cov_new < floor:
+            fails.append(f"kernel_coverage: {cov_new:.1%} < {floor:.1%} "
+                         f"(base {cov_old:.1%})")
+    base_comm = {(r["program"], r.get("devices")): r
+                 for r in base.get("comm_scaling", [])}
+    for r in snap.get("comm_scaling", []):
+        # correctness first: depends only on the fresh snapshot, so it must
+        # fire even for rows the committed baseline has never seen
+        if not r.get("bit_identical", True):
+            fails.append(f"comm_scaling/{r['program']}/{r.get('devices')}dev: "
+                         "dist result not bit-identical")
+        b = base_comm.get((r["program"], r.get("devices")))
+        if b is None or not b.get("bytes_singleton"):
+            continue
+        floor = _savings(b) * (1.0 - tolerance) - SAVINGS_SLACK
+        if _savings(r) < floor:
+            fails.append(
+                f"comm_scaling/{r['program']}/{r.get('devices')}dev: savings "
+                f"{_savings(r):.1%} < {floor:.1%} (base {_savings(b):.1%})")
+    return fails
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default="BENCH_4.json",
                     help="output path for the snapshot JSON")
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer device counts")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="baseline snapshot JSON; fail on regressions "
+                         "past --tolerance (loaded before --json is "
+                         "overwritten, so both may name the same file)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative regression tolerance for --compare")
     args = ap.parse_args()
+
+    base = None
+    if args.compare is not None:
+        with open(args.compare) as f:
+            base = json.load(f)
 
     t0 = time.time()
     sizes = [250, 1000] if not args.quick else [250]
@@ -124,6 +235,7 @@ def main() -> None:
         "schema": "bench_snapshot_v1",
         "argv": sys.argv[1:],
         "unix_time": t0,
+        "machine_ref_s": machine_ref_s(),
         "partition_scaling": snap_partition_scaling(sizes),
         "kernel_coverage": snap_kernel_coverage(),
         "comm_scaling": snap_comm_scaling(devices),
@@ -134,6 +246,17 @@ def main() -> None:
         json.dump(snap, f, indent=1)
         f.write("\n")
     print(f"\nsnapshot -> {args.json} ({snap['wall_s']:.0f}s)", flush=True)
+
+    if base is not None:
+        fails = compare_snapshots(snap, base, args.tolerance)
+        if fails:
+            print(f"\nPERF REGRESSION vs {args.compare} "
+                  f"(tolerance {args.tolerance:.0%}):", file=sys.stderr)
+            for f_ in fails:
+                print(f"  - {f_}", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"perf gate: no regressions vs {args.compare} "
+              f"(tolerance {args.tolerance:.0%})", flush=True)
 
 
 if __name__ == "__main__":

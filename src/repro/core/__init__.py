@@ -5,9 +5,10 @@ from .ir import BaseArray, COMM_OPS, Op, View                    # noqa: F401
 from .fusion import (WSPGraph, build_graph,                      # noqa: F401
                      build_graph_reference, fusible, depends)
 from .blocks import BlockInfo                                    # noqa: F401
-from .cost import (BohriumCost, CommCost, CostModel,             # noqa: F401
-                   MaxContractCost, MaxLocalityCost, RobinsonCost,
-                   TPUCost, TPUDistCost, make_cost_model,
+from .cost import (BohriumCost, CalibratedCost, CommCost,        # noqa: F401
+                   CostModel, MaxContractCost, MaxLocalityCost,
+                   RobinsonCost, TPUCost, TPUDistCost,
+                   make_cost_model, model_cache_token,
                    closed_form_saving)
 from .partition import PartitionState                            # noqa: F401
 from .algorithms import PartitionResult, partition               # noqa: F401
@@ -21,3 +22,4 @@ from .scheduler import BlockPlan, Schedule, Scheduler, plan_blocks  # noqa: F401
 from .dist import (DistBlockExecutor, ShardSpec,                 # noqa: F401
                    insert_resharding, host_mesh)
 from . import lazy                                               # noqa: F401
+from . import tuning                                             # noqa: F401

@@ -22,7 +22,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .blocks import BlockInfo
-from .cost import CostModel, make_cost_model
+from .cost import make_cost_model
 from .fusion import WSPGraph, build_graph, build_graph_reference
 from .ir import Op
 from .partition import PartitionState, _ekey

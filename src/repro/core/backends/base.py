@@ -204,11 +204,17 @@ def select_lowering(ops: Sequence, plan, backends: Sequence[str],
     """Pick the backend that runs one block.
 
     ``backends`` is the preference-ordered candidate list.  Each candidate
-    is asked to claim the block; claimants are priced by their dispatch
-    count through ``cost_model.dispatch_price`` (dispatch count itself when
-    no model is given) and the cheapest wins, preference order breaking
-    ties.  Returns a :class:`LoweringDecision` whose ``declined`` tuple
-    keeps the reasons of every backend preferred over the winner."""
+    is asked to claim the block; claimants are priced through
+    ``cost_model.lowering_price(n_dispatches, ext_bytes, backend=name)``
+    (the raw dispatch count when no model is given) and the cheapest wins,
+    preference order breaking ties.  For analytic models the price reduces
+    to ``dispatch_price`` — external bytes move at one assumed bandwidth
+    regardless of backend, so the byte term cancels from the comparison.
+    A calibrated model (DESIGN.md §15) prices each candidate at its own
+    *measured* per-dispatch overhead and per-byte slope, which is what lets
+    measured reality flip a decision.  Returns a :class:`LoweringDecision`
+    whose ``declined`` tuple keeps the reasons of every backend preferred
+    over the winner."""
     order = {n: i for i, n in enumerate(backends)}
     declined = []
     claimants = []
@@ -226,10 +232,20 @@ def select_lowering(ops: Sequence, plan, backends: Sequence[str],
     if len(claimants) == 1:
         best = claimants[0]
     else:
+        ext_bytes = 0.0
+        if cost_model is not None:
+            from ..cost import CostModel
+            if type(cost_model).lowering_price is not CostModel.lowering_price:
+                # only models that actually price bytes per backend (e.g.
+                # "calibrated") pay for the block summary; for analytic
+                # models the byte term cancels out of the comparison anyway
+                from ..blocks import BlockInfo
+                ext_bytes = float(BlockInfo.from_ops(ops).ext_size("bytes"))
+
         def price(be: LoweringBackend) -> float:
             n = be.dispatches(ops, plan, ctx)
-            return (cost_model.dispatch_price(n) if cost_model is not None
-                    else float(n))
+            return (cost_model.lowering_price(n, ext_bytes, backend=be.name)
+                    if cost_model is not None else float(n))
         best = min(claimants, key=lambda be: (price(be), order[be.name]))
     cut = order[best.name]
     return LoweringDecision(

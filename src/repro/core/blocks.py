@@ -10,7 +10,7 @@ algorithms.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, FrozenSet, List, Optional, Tuple
 
 from .ir import Op, View
@@ -53,6 +53,18 @@ class BlockInfo:
             domain=dom,
             sync_bases=frozenset(b.uid for b in op.sync_bases),
         )
+
+    @staticmethod
+    def from_ops(ops) -> "BlockInfo":
+        """Summary of a whole op sequence (fold of ``from_op``/``merged_with``
+        — the shape the lower stage and the tuning profiler both need)."""
+        info: Optional[BlockInfo] = None
+        for op in ops:
+            bi = BlockInfo.from_op(op)
+            info = bi if info is None else info.merged_with(bi)
+        if info is None:
+            raise ValueError("from_ops needs at least one op")
+        return info
 
     def merged_with(self, other: "BlockInfo") -> "BlockInfo":
         """Union of two block summaries (``self`` need not precede ``other``;

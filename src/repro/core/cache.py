@@ -25,15 +25,19 @@ def _shard_digest(tape: Sequence[Op]) -> Tuple:
 
 
 def tape_signature(tape: Sequence[Op], algorithm: str, cost_model: str,
-                   topology: Tuple = (), backends: Tuple = ()) -> Tuple:
+                   topology: Tuple = (), backends: Tuple = (),
+                   cost_token: Tuple = ()) -> Tuple:
     """Canonical merge-cache key.  ``topology`` is the executor's device/mesh
     identity (``dist.mesh.topology_key``): a partition computed under one
     device count must never be replayed under another once plans become
     placement-dependent.  ``backends`` is the lowering policy's candidate
     list (``LoweringPolicy.key()``): cached entries carry per-block backend
-    decisions, which are only valid for the stack that made them."""
-    return (algorithm, cost_model, tuple(topology), tuple(backends),
-            _shard_digest(tape), block_signature(tape))
+    decisions, which are only valid for the stack that made them.
+    ``cost_token`` is the cost model's extra identity beyond its name
+    (``cost.model_cache_token``) — the ``calibrated`` model's prices move
+    with each installed fit, so its calibration epoch keys the cache too."""
+    return (algorithm, cost_model, tuple(cost_token), tuple(topology),
+            tuple(backends), _shard_digest(tape), block_signature(tape))
 
 
 class MergeCache:

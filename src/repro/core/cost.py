@@ -13,8 +13,7 @@ All models are monotone: ``merge_saving >= 0`` always (hypothesis-tested).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 from .blocks import BlockInfo, view_key
 from .ir import Op, View
@@ -24,6 +23,13 @@ HBM_BW = 819e9            # bytes/s
 ICI_BW = 50e9             # bytes/s per link
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 KERNEL_LAUNCH_S = 2e-6    # per-dispatch overhead (XLA executable launch)
+
+# Version of the cost-model registry's *feature space* — the quantities a
+# measured profile records (dispatch counts, ext HBM bytes, unique-collective
+# fabric bytes).  Persisted profiles (tuning.profile) embed it; bump it
+# whenever pricing features change meaning, and every stale profile on disk
+# is refused instead of silently miscalibrating a fit.
+COST_REGISTRY_VERSION = 5
 
 
 class CostModel:
@@ -50,14 +56,30 @@ class CostModel:
         merged = b1.merged_with(b2)
         return self.block_cost(b1) + self.block_cost(b2) - self.block_cost(merged)
 
-    def dispatch_price(self, n_dispatches: int) -> float:
+    def dispatch_price(self, n_dispatches: int,
+                       backend: Optional[str] = None) -> float:
         """Price of ``n`` executable dispatches for one block — the
         per-backend term the scheduler's lower stage minimizes when picking
         a block's lowering backend (DESIGN.md §14).  Models with a
         ``launch_s`` term (the ``tpu*`` family) price dispatches in
         seconds, matching their partition-time ``_KernelAlignment``
-        pricing; abstract models price the dispatch count itself."""
+        pricing; abstract models price the dispatch count itself.
+        ``backend`` names the candidate being priced: the analytic models
+        ignore it (one launch price fits all), while ``calibrated`` prices
+        each backend at its *fitted* per-dispatch overhead — the hook that
+        lets measured reality flip a lowering decision (DESIGN.md §15)."""
         return getattr(self, "launch_s", 1.0) * float(n_dispatches)
+
+    def lowering_price(self, n_dispatches: int, ext_bytes: float,
+                       backend: Optional[str] = None) -> float:
+        """Full per-backend price of running one block on ``backend`` — what
+        ``select_lowering`` actually minimizes.  The analytic default is
+        just :meth:`dispatch_price`: every backend moves the same external
+        bytes at the same assumed bandwidth, so the byte term cancels out
+        of the comparison.  Calibrated models price per-backend byte slopes
+        too (an interpreter moves a byte slower than a fused kernel), which
+        is measurable and does NOT cancel."""
+        return self.dispatch_price(n_dispatches, backend=backend)
 
 
 class BohriumCost(CostModel):
@@ -355,6 +377,72 @@ class TPUFMACost(TPUCost):
         return total + self.FMA_BONUS_S * n_ops
 
 
+class CalibratedCost(TPUCost):
+    """``tpu``'s structure with MEASURED prices (DESIGN.md §15).
+
+    Same monotone decomposition as :class:`TPUCost` — HBM traffic time plus
+    per-dispatch overhead, plus a :class:`CommCost`-style unique-collective
+    fabric term — but every coefficient comes from the least-squares fit of
+    the process-wide calibration (``tuning.install_fit`` /
+    ``tuning.calibrate``) instead of datasheet constants:
+
+    * ``hbm_s_per_byte``     → the HBM term,
+    * ``fabric_s_per_byte``  → the fabric term,
+    * ``launch_s[backend]``  → per-BACKEND dispatch overhead.  Partitioning
+      prices a block's dispatch term at the *cheapest* fitted backend (the
+      lower stage will route it there); ``dispatch_price`` prices each
+      lowering candidate at its own fitted overhead, so a backend that
+      measures slow (e.g. the Pallas interpreter on a CPU host) loses
+      blocks it would win on dispatch counts alone.
+
+    With **zero samples** (no installed fit) every coefficient is the
+    analytic default, i.e. the model degenerates to exactly its base
+    ``tpu`` pricing (plus the fabric term, which is zero on tapes without
+    COMM ops) — "calibrated" is always safe to select.
+
+    Monotone: identical term structure to ``TPUCost``/``CommCost`` with
+    constant per-view/per-dispatch prices, so merging only deduplicates and
+    contracts — every term shrinks.
+    """
+
+    def __init__(self, fit=None, align_codegen: bool = True):
+        if fit is None:
+            from .tuning.calibrate import current_fit
+            fit = current_fit()
+        self.fit = fit
+        launch = (fit.launch_for(None) if fit is not None else None)
+        hbm_bw = (1.0 / fit.hbm_s_per_byte
+                  if fit is not None and fit.hbm_s_per_byte > 0 else HBM_BW)
+        super().__init__(hbm_bw=hbm_bw,
+                         launch_s=launch if launch is not None
+                         else KERNEL_LAUNCH_S,
+                         align_codegen=align_codegen)
+        self.name = "calibrated"
+        self.fabric_s_per_byte = (fit.fabric_s_per_byte if fit is not None
+                                  else 1.0 / ICI_BW)
+
+    def block_cost(self, b: BlockInfo) -> float:
+        base = super().block_cost(b)
+        if base == 0.0:
+            return base             # DEL/SYNC-only blocks dispatch nothing
+        from .dist.reshard import block_comm_bytes
+        return base + block_comm_bytes(b.ops) * self.fabric_s_per_byte
+
+    def dispatch_price(self, n_dispatches: int,
+                       backend: Optional[str] = None) -> float:
+        per = self.fit.launch_for(backend) if self.fit is not None else None
+        return (per if per is not None else self.launch_s) * float(n_dispatches)
+
+    def lowering_price(self, n_dispatches: int, ext_bytes: float,
+                       backend: Optional[str] = None) -> float:
+        slope = (self.fit.hbm_slope_for(backend) if self.fit is not None
+                 else None)
+        if slope is None:
+            slope = 1.0 / self.hbm_bw
+        return (self.dispatch_price(n_dispatches, backend=backend)
+                + slope * float(ext_bytes))
+
+
 class CommCost(CostModel):
     """Communication-aware WSP over the sharded IR (core/dist): the paper's
     fusion criterion "shape compatibility, data reusability AND
@@ -401,6 +489,7 @@ class CommCost(CostModel):
 
 _MODELS = {
     "bohrium": BohriumCost,
+    "calibrated": CalibratedCost,
     "comm": CommCost,
     "max_contract": MaxContractCost,
     "max_locality": MaxLocalityCost,
@@ -424,6 +513,8 @@ def make_cost_model(name: str, **kw) -> CostModel:
     * ``"tpu_dist"``     — ``tpu`` plus ICI halo-exchange time
     * ``"tpu_fma"``      — ``tpu`` plus a mul→add co-location bonus
     * ``"comm"``         — sharded-IR model pricing explicit COMM nodes
+    * ``"calibrated"``   — ``tpu``'s structure with measured, fitted prices
+      (per-backend dispatch overhead, HBM and fabric bytes; DESIGN.md §15)
 
     All models are monotone (``merge_saving >= 0``); models with
     ``sparse_weights=True`` opt into the sparse saving-support weight graph
@@ -432,3 +523,16 @@ def make_cost_model(name: str, **kw) -> CostModel:
         return _MODELS[name](**kw)
     except KeyError:
         raise ValueError(f"unknown cost model {name!r}; have {sorted(_MODELS)}")
+
+
+def model_cache_token(name: str) -> Tuple:
+    """Extra merge-cache identity of a cost model beyond its name.
+
+    The ``calibrated`` model's prices change whenever a new fit is
+    installed, so its token carries the calibration epoch — plans priced
+    under an old fit are never replayed after re-calibration.  Analytic
+    models are fully identified by their name."""
+    if name == "calibrated":
+        from .tuning.calibrate import current_epoch
+        return ("calibrated_epoch", current_epoch())
+    return ()

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from typing import Optional
 
-from ..ir import BaseArray, Op, View
+from ..ir import View
 from .executor import DistBlockExecutor                      # noqa: F401
 from .mesh import DEFAULT_AXIS, host_mesh, topology_key      # noqa: F401
 from .reshard import (block_comm_bytes, comm_op_bytes,       # noqa: F401

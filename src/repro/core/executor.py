@@ -19,13 +19,14 @@ signature)``, so iterative workloads (the paper's merge-cache scenario,
 
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ir import COMM_OPS, ELEMENTWISE, REDUCTIONS, Op, View
+from .ir import COMM_OPS, Op, View
 
 _UNARY = {
     "copy": lambda x: x, "sqrt": jnp.sqrt, "exp": jnp.exp, "log": jnp.log,
@@ -308,7 +309,7 @@ class BlockExecutor:
 
     def __init__(self, seed: int = 0, jit: bool = True,
                  backend="xla", donate="auto", mesh=None,
-                 axis: Optional[str] = None):
+                 axis: Optional[str] = None, profiler=None):
         """``backend`` resolves to the preference-ordered candidate list of
         the lowering policy (``backends.default_stack``): ``"xla"`` runs
         everything as jitted XLA programs; ``"pallas"`` prefers the tiled
@@ -317,13 +318,18 @@ class BlockExecutor:
         ``jax.sharding.Mesh``) prepends the ``shard_map`` backend so
         sharded blocks run with real collectives.  donate='auto' enables
         input donation on platforms that implement it (GPU/TPU); True
-        forces it, False disables it."""
+        forces it, False disables it.  ``profiler`` (a
+        ``tuning.Profiler``) turns on per-block wall-time capture: warm
+        dispatches are forced to completion and timed — measurement trades
+        the async pipeline away, so attach one only to calibrate
+        (DESIGN.md §15)."""
         from .backends import default_stack
         self.seed = seed
         self.jit = jit
         self.backend = backend            # policy shorthand, kept for repr
         self.donate = donate
         self.mesh = mesh
+        self.profiler = profiler
         if mesh is not None:
             self.axis = axis or mesh.axis_names[0]
             self.n_dev = int(np.prod(mesh.devices.shape))
@@ -441,15 +447,17 @@ class BlockExecutor:
 
     def _executable(self, decision, ops: Sequence[Op], plan, ctx) -> Tuple:
         """Look up (or build) the jitted executable for one decided plan.
-        Returns ``(fn, donates, decision)`` — the stored decision may
+        Returns ``(fn, donates, decision, warm)`` — the stored decision may
         differ from the requested one if the chosen backend's builder
-        failed and the block degraded to XLA (reason ``"error"``)."""
+        failed and the block degraded to XLA (reason ``"error"``); ``warm``
+        is True on a cache hit (the profiler times only warm dispatches —
+        cold ones include trace+compile time)."""
         from .backends import LoweringDecision, get_backend
         key = self._cache_key(ops, plan, backend=decision.backend, ctx=ctx)
         cached = self._cache.get(key)
         if cached is not None:
             self.stats["exec_cache_hits"] += 1
-            return cached
+            return (*cached, True)
         self.stats["exec_cache_misses"] += 1
         be = get_backend(decision.backend)
         try:
@@ -469,7 +477,7 @@ class BlockExecutor:
             fn = jax.jit(fn, donate_argnums=donate)
         entry = (fn, bool(donate), decision)
         self._cache[key] = entry
-        return entry
+        return (*entry, False)
 
     def _account(self, decision, plan, donates: bool) -> None:
         """Uniform per-dispatch stats plus the legacy aliases."""
@@ -518,7 +526,7 @@ class BlockExecutor:
                 # plan inputs/outputs are uid lists of THIS flush; the
                 # canonical signature guarantees positional correspondence
                 # with the cached executable across flushes.
-                fn, donates, decision = self._executable(
+                fn, donates, decision, warm = self._executable(
                     decision, ops, plan, ctx)
                 self._account(decision, plan, donates)
                 in_bufs = []
@@ -531,7 +539,15 @@ class BlockExecutor:
                              if not op.is_system() and op.opcode == "random"]
                 salts = (jnp.asarray(salt_list, dtype=jnp.int32)
                          if salt_list else self._empty_salts)
-                out_bufs = fn(*in_bufs, salts)
+                timing = warm and self.profiler is not None
+                if timing:
+                    jax.block_until_ready(in_bufs)   # drain queued work so
+                    t0 = time.perf_counter()         # the clock sees only
+                out_bufs = fn(*in_bufs, salts)       # THIS block
+                if timing:
+                    jax.block_until_ready(out_bufs)
+                    self.profiler.record(decision.backend, ops, plan, ctx,
+                                         time.perf_counter() - t0)
                 for u, b in zip(plan.outputs, out_bufs):
                     buffers[u] = b
                 get_backend(decision.backend).post_dispatch(

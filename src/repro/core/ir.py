@@ -10,7 +10,7 @@ partitioning in ``repro.core.fusion``.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from math import gcd
 from typing import Optional, Sequence, Tuple
 

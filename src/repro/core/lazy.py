@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import contextlib
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -66,12 +66,17 @@ class Runtime:
         resharding pass.
     history_limit : cap on ``Runtime.history`` entries (bounded deque, so
         long-lived serving processes don't grow memory without bound).
+    profiler : optional ``repro.core.tuning.Profiler``; when set, warm
+        block dispatches are timed to completion and recorded for
+        cost-model calibration (DESIGN.md §15).  Profiling sacrifices the
+        async dispatch pipeline — attach one only to calibrate.
     """
 
     def __init__(self, algorithm: str = "greedy", cost_model: str = "bohrium",
                  use_cache: bool = True, node_budget: int = 100_000,
                  seed: int = 0, jit: bool = True, backend="xla",
-                 donate="auto", mesh=None, history_limit: int = 1024):
+                 donate="auto", mesh=None, history_limit: int = 1024,
+                 profiler=None):
         self.algorithm = algorithm
         self.cost_model = cost_model
         self.use_cache = use_cache
@@ -81,7 +86,8 @@ class Runtime:
         self.scheduler = Scheduler(MergeCache())
         self.cache = self.scheduler.cache
         self.executor = BlockExecutor(seed=seed, jit=jit, backend=backend,
-                                      donate=donate, mesh=mesh)
+                                      donate=donate, mesh=mesh,
+                                      profiler=profiler)
         self._known: set = set()
         self._refcount: Dict[int, int] = {}
         self._bases: Dict[int, BaseArray] = {}

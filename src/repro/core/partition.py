@@ -19,7 +19,6 @@ models they serve (differentially tested).
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
 
 from .blocks import BlockInfo, view_key

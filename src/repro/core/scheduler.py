@@ -48,7 +48,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .algorithms import PartitionResult, partition
 from .backends import LoweringDecision, LoweringPolicy, select_lowering
 from .cache import MergeCache, tape_signature
-from .cost import make_cost_model
+from .cost import make_cost_model, model_cache_token
 from .executor import block_dead_bases, block_io, block_signature
 from .ir import Op
 
@@ -154,7 +154,8 @@ class Scheduler:
         if use_cache:
             key = tape_signature(tape, algorithm, cost_model,
                                  topology=topology,
-                                 backends=lowering.key() if lowering else ())
+                                 backends=lowering.key() if lowering else (),
+                                 cost_token=model_cache_token(cost_model))
             entry = self.cache.get(key)
             if entry is not None:
                 blocks, decisions = entry

@@ -1,0 +1,9 @@
+"""Testing utilities that ship with the package (not the test suite):
+``repro.testing.tapegen`` — the seeded random lazy-program generator used
+both as the calibration workload (``core.tuning.calibrate``) and as the
+differential fuzzer behind the CI fuzz job (DESIGN.md §15).
+
+Import the submodule directly (``from repro.testing import tapegen``): the
+package init stays import-free so ``python -m repro.testing.tapegen`` runs
+without the runpy double-import warning.
+"""

@@ -1,0 +1,415 @@
+"""Seeded random lazy-program generator + differential fuzzer (DESIGN.md §15).
+
+A :class:`TapeProgram` is a deterministic function of its seed: the same
+seed always performs the same sequence of lazy-array actions — elementwise
+chains, axis/full reductions, strided and partial views, RMW partial
+writes, scalar/row/column broadcasts, transposes, opaque matmuls, explicit
+DELs, quantized ``random`` draws and (``sharded=True``) placement
+annotations that make the flush insert COMM collectives.  Replaying one
+program under different runtime configurations is therefore a *differential
+test*: every configuration must produce bitwise-identical results.
+
+**Why bitwise equality is achievable.**  In ``exact=True`` mode (the fuzz
+default) programs stay closed over *low-granularity dyadic* float64 data:
+leaves are integer-valued, scalar factors are dyadic (0.5/0.25/2/3/-1.5),
+array-array products are clamped back to whole integers
+(``floor(x % 1021)``), and magnitude-growing scalar chains are re-bounded
+by ``% 1021``.  Elementwise ops are computed per element in program order
+under every partition (only identical rounding can occur), and every
+value that reaches a *reduction* is a bounded-magnitude dyadic whose sums
+are exactly representable — so reductions are exactly associative and the
+answer is independent of partition shape, tiling, accumulation order or
+collective schedule.  Any mismatch is a real bug, never round-off.
+``exact=False`` widens the opcode pool with transcendentals
+(sin/exp/sqrt/div/…) for calibration workloads, where values need to look
+like real numerics and nobody compares them.
+
+**Shrinking by seed**: there is no structural shrinker — the generator is
+seeded and sized, so a failure reproduces from two integers.  The sweep
+prints the failing seed and the exact one-command repro; shrink by
+rerunning ``--only SEED`` with smaller ``--actions``/``--size`` until the
+tape is small enough to read.
+
+Checks (each returns normally or raises ``AssertionError``):
+
+* ``check_graph`` — staged base-indexed ``build_graph`` produces identical
+  E_d/E_f to the O(V²) ``build_graph_reference`` oracle (sharded tapes are
+  run through ``insert_resharding`` first, exactly like a real flush);
+* ``check_exec``  — fused greedy/XLA and greedy/Pallas runs are bitwise
+  identical to the unfused singleton/XLA reference;
+* ``check_dist``  — a COMM-inserting sharded program on a real device mesh
+  (shard_map collectives) is bitwise identical to the same program on a
+  single device (COMM as identity copies).
+
+CLI sweep (the CI fuzz job)::
+
+    PYTHONPATH=src python -m repro.testing.tapegen --n 200 [--dist]
+    PYTHONPATH=src python -m repro.testing.tapegen --only 1337   # repro
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# value bound for products: keeps every intermediate integer exactly
+# representable in float64 (see module docstring)
+_MOD = 1021.0
+
+
+class TapeProgram:
+    """One seeded random lazy program.
+
+    Parameters
+    ----------
+    seed      : the program identity; everything derives from it.
+    n_actions : number of generator actions (tape length scales with it).
+    size      : elements in the 1-D working shape (2-D uses ``(8, size//8)``;
+                sizes below 64 are rounded up so both shapes exist).
+    exact     : restrict to the dyadic/integer-valued opcode pool whose
+                results are bitwise partition-invariant (see module doc).
+    sharded   : annotate some whole-base arrays as block-sharded over
+                ``n_shards`` logical shards and insert explicit placement
+                casts — the flush's resharding pass then injects COMM ops.
+    n_shards  : logical shard count (match the mesh size when executing on
+                a real mesh so the shard_map backend claims the blocks).
+    """
+
+    def __init__(self, seed: int, *, n_actions: int = 20, size: int = 64,
+                 exact: bool = True, sharded: bool = False,
+                 n_shards: int = 4):
+        self.seed = int(seed)
+        self.n_actions = int(n_actions)
+        self.size = max(64, int(size) - int(size) % 8)
+        self.exact = bool(exact)
+        self.sharded = bool(sharded)
+        self.n_shards = int(n_shards)
+
+    # -- the generator --------------------------------------------------
+    def _build(self, rt, materialize: bool) -> List[np.ndarray]:
+        """Run the action sequence against runtime ``rt`` (already the
+        active runtime).  With ``materialize`` the live arrays are read
+        back (flushing the tape); without, the recorded tape is left in
+        place for graph-level checks."""
+        from repro.core import lazy as bh
+        rnd = random.Random(self.seed)
+        n = self.size
+        shapes = {"1d": (n,), "2d": (8, n // 8)}
+        pool: List[Tuple[object, str, bool]] = []   # (arr, kind, whole_base)
+
+        def quantize(a):
+            # integer-valued in [0, 16): exact under float64 arithmetic
+            return bh.floor(a * 16.0)
+
+        def fresh(kind: str):
+            shape = shapes[kind]
+            w = rnd.randrange(3)
+            if w == 0:
+                a = bh.full(shape, float(rnd.randrange(-8, 9)))
+            elif w == 1 and kind == "1d":
+                a = bh.arange(n) * (0.5 if rnd.random() < 0.3 else 1.0)
+            else:
+                a = quantize(bh.random(shape))
+            pool.append((a, kind, True))
+            return a
+
+        for kind in ("1d", "2d"):
+            fresh(kind)
+        if self.sharded:
+            from repro.core.dist import shard
+            for i, (a, kind, whole) in enumerate(pool):
+                if whole and rnd.random() < 0.8:
+                    shard(a, dim=0, n=self.n_shards)
+
+        def pick(kind: Optional[str] = None):
+            cands = [e for e in pool if kind is None or e[1] == kind]
+            return cands[rnd.randrange(len(cands))] if cands else None
+
+        def clamp(a):
+            # After an array-array product, both bound the magnitude AND
+            # reset the dyadic granularity to whole integers: reductions
+            # over the result are then exactly associative no matter how
+            # deep the producing chains were (see module docstring).
+            return bh.floor(a % _MOD) if self.exact \
+                else bh.tanh(a * 0.125) * 8.0
+
+        for _ in range(self.n_actions):
+            act = rnd.randrange(14)
+            ent = pick()
+            if ent is None:
+                fresh("1d")
+                continue
+            a, kind, _whole = ent
+            if kind not in shapes and act not in (0, 2, 3, 11):
+                continue    # odd-shaped leftovers only do shape-free actions
+            shape = shapes.get(kind)
+            if act == 0:                       # new leaf
+                fresh(rnd.choice(("1d", "2d")))
+            elif act == 1:                     # elementwise binop, same shape
+                other = pick(kind)
+                oc = rnd.choice(("add", "sub", "mul", "maximum", "minimum"))
+                b = other[0]
+                r = {"add": lambda: a + b, "sub": lambda: a - b,
+                     "mul": lambda: clamp(a * b),
+                     "maximum": lambda: bh.maximum(a, b),
+                     "minimum": lambda: bh.minimum(a, b)}[oc]()
+                pool.append((r, kind, True))
+            elif act == 2:                     # scalar chain (dyadic consts)
+                c = rnd.choice((0.5, 0.25, 2.0, 3.0, -1.5))
+                r = a * c
+                if self.exact and abs(c) >= 1.5:
+                    r = r % _MOD               # upscaling: re-bound magnitude
+                r = r + float(rnd.randrange(-4, 5))
+                pool.append((r, kind, True))
+            elif act == 3:                     # unary
+                fns = [bh.absolute, bh.floor, bh.sign,
+                       lambda x: -x, lambda x: x.copy()]
+                if not self.exact:
+                    fns += [lambda x: bh.sqrt(bh.absolute(x)), bh.sin,
+                            bh.cos, bh.tanh,
+                            lambda x: bh.log(bh.absolute(x) + 1.0),
+                            lambda x: 1.0 / (bh.absolute(x) + 1.0)]
+                pool.append((fns[rnd.randrange(len(fns))](a), kind, True))
+            elif act == 4:                     # in-place update (same base)
+                other = pick(kind)
+                a += other[0] * rnd.choice((0.5, 1.0, 2.0))
+            elif act == 5:                     # where on a comparison
+                other = pick(kind)
+                pool.append((bh.where(a > other[0], a, other[0]), kind, True))
+            elif act == 6:                     # reduction
+                oc = rnd.choice(("sum", "max", "min"))
+                axis = rnd.choice((None, 0, 1)) if kind == "2d" \
+                    else rnd.choice((None, 0))
+                r = getattr(a, oc)(axis)
+                if axis is None:               # scalar: broadcast back in
+                    r = bh.zeros(shapes["1d"]) + r.broadcast_to(shapes["1d"])
+                    pool.append((r, "1d", True))
+                elif kind == "2d":
+                    # feed the genuine row/col vector forward as a stride-0
+                    # broadcast operand — vector-shaped reduction outputs
+                    # are exactly where tiling bugs would hide
+                    if axis == 0:              # row vector (n//8,)
+                        r2 = r.broadcast_to(shapes["2d"])
+                    else:                      # col vector (8,) -> column
+                        r2 = r.broadcast_to((shapes["2d"][1], 8)).T
+                    two = pick("2d")
+                    if two is not None:
+                        pool.append((two[0] + r2, "2d", True))
+                else:
+                    r = bh.zeros(shapes["1d"]) + r.broadcast_to(shapes["1d"])
+                    pool.append((r, "1d", True))
+            elif act == 7:                     # strided/partial view read
+                if kind == "1d":
+                    sl = rnd.choice((slice(0, None, 2), slice(1, None, 2),
+                                     slice(1, -1), slice(None, n // 2)))
+                    v = a[sl]
+                    c = bh.zeros(shape)
+                    c[0:v.shape[0]] = v        # partial write of the window
+                else:
+                    v = a[1:-1, :]
+                    c = bh.zeros(shape)
+                    c[1:-1, :] = v
+                pool.append((c, kind, True))
+            elif act == 8:                     # RMW partial write
+                other = pick(kind)
+                if kind == "1d":
+                    a[n // 4: 3 * n // 4] = other[0][n // 4: 3 * n // 4] + 1.0
+                else:
+                    a[2:6, :] = other[0][2:6, :] * 0.5
+            elif act == 9:                     # broadcast 1d row into 2d
+                row = pick("1d")
+                if row is not None:
+                    r2 = row[0][0: n // 8].broadcast_to(shapes["2d"])
+                    two = pick("2d")
+                    if two is not None:
+                        pool.append((two[0] + r2, "2d", True))
+            elif act == 10 and kind == "2d":   # transpose read (gather path)
+                sq = a[:, 0:8]
+                pool.append((sq.T.copy().reshape(64), "none", True))
+            elif act == 11:                    # explicit DEL
+                if len(pool) > 2:
+                    i = pool.index(ent)
+                    pool.pop(i)
+                    a.delete()
+            elif act == 12 and kind == "2d" and rnd.random() < 0.5:
+                m = a[:, 0:8]                  # opaque op: small matmul
+                r = bh.matmul(m.T.copy(), m.copy())
+                pool.append((r.reshape(64) % _MOD, "none", True))
+            elif act == 13 and self.sharded:
+                from repro.core.dist import ShardSpec, reshard, spec_of
+                src = ent
+                if src[2]:
+                    s = spec_of(src[0].view.base)
+                    if s is None:
+                        spec = ShardSpec.for_dim(src[0].shape, 0, "dev",
+                                                 self.n_shards)
+                        pool.append((reshard(src[0], spec), src[1], True))
+                    else:
+                        pool.append((reshard(src[0], None), src[1], True))
+            # other act values on mismatched kinds: no-op (keeps the action
+            # stream aligned across replays regardless of branch outcomes)
+
+        outs: List[np.ndarray] = []
+        if materialize:
+            for a, _, _ in pool:
+                outs.append(a.numpy())
+        for a, _, _ in pool:
+            a._alive = False                   # no DELs after harvest
+        return outs
+
+    # -- public entry points --------------------------------------------
+    def run(self, **runtime_kw) -> List[np.ndarray]:
+        """Execute under a fresh runtime built from ``runtime_kw`` and
+        return every live array materialized, in creation order."""
+        from repro.core.lazy import fresh_runtime
+        with fresh_runtime(**runtime_kw) as rt:
+            return self._build(rt, materialize=True)
+
+    def run_current(self) -> List[np.ndarray]:
+        """Execute against the *currently active* runtime (callers own the
+        ``fresh_runtime`` context).  Repeated calls in one runtime replay a
+        structurally-identical tape — merge-cache and executable-cache hits
+        — which is how the calibration loop gets warm, timeable dispatches."""
+        from repro.core.lazy import get_runtime
+        return self._build(get_runtime(), materialize=True)
+
+    def record(self) -> List:
+        """Record the program without executing; returns the tape."""
+        from repro.core.lazy import fresh_runtime
+        with fresh_runtime() as rt:
+            self._build(rt, materialize=False)
+            tape = list(rt.tape)
+            rt.tape.clear()
+        return tape
+
+
+# ---------------------------------------------------------------------------
+# Differential checks
+# ---------------------------------------------------------------------------
+
+def _assert_bitwise(ref: Sequence[np.ndarray], got: Sequence[np.ndarray],
+                    label: str) -> None:
+    assert len(ref) == len(got), f"{label}: {len(ref)} vs {len(got)} outputs"
+    for i, (r, g) in enumerate(zip(ref, got)):
+        assert r.dtype == g.dtype and r.shape == g.shape, \
+            f"{label}: output {i} meta {r.dtype}{r.shape} vs {g.dtype}{g.shape}"
+        if r.tobytes() != g.tobytes():
+            bad = int(np.flatnonzero(r.reshape(-1) != g.reshape(-1))[0])
+            raise AssertionError(
+                f"{label}: output {i} differs at flat index {bad}: "
+                f"{r.reshape(-1)[bad]!r} vs {g.reshape(-1)[bad]!r}")
+
+
+def check_graph(seed: int, *, n_actions: int = 20, size: int = 64,
+                sharded: bool = False) -> None:
+    """Staged graph builder == O(V²) reference oracle, edge for edge."""
+    from repro.core import build_graph, build_graph_reference
+    from repro.core.dist import insert_resharding, tape_has_sharding
+    tape = TapeProgram(seed, n_actions=n_actions, size=size,
+                       sharded=sharded).record()
+    if tape_has_sharding(tape):
+        tape = insert_resharding(tape)
+    a = build_graph(list(tape))
+    b = build_graph_reference(list(tape))
+    assert a.dep_out == b.dep_out, f"seed {seed}: E_d (out) differs"
+    assert a.dep_in == b.dep_in, f"seed {seed}: E_d (in) differs"
+    assert a.fuse_forbidden == b.fuse_forbidden, f"seed {seed}: E_f differs"
+
+
+def check_exec(seed: int, *, n_actions: int = 20, size: int = 64) -> None:
+    """Fused (greedy; XLA and Pallas backend stacks) == unfused singleton
+    XLA reference, bitwise."""
+    prog = TapeProgram(seed, n_actions=n_actions, size=size, exact=True)
+    ref = prog.run(algorithm="singleton", backend="xla")
+    for algorithm, backend in (("greedy", "xla"), ("greedy", "pallas")):
+        got = prog.run(algorithm=algorithm, backend=backend)
+        _assert_bitwise(ref, got,
+                        f"seed {seed} [{algorithm}/{backend} vs singleton]")
+
+
+def check_dist(seed: int, *, n_actions: int = 20, size: int = 64,
+               n_dev: int = 0) -> None:
+    """Sharded COMM-inserting program: shard_map collectives on a device
+    mesh == identity-copy COMM on a single device, bitwise."""
+    import jax
+    from repro.core.dist import host_mesh
+    if n_dev <= 0:
+        n_dev = len(jax.devices())
+    if n_dev < 2:
+        return                                 # nothing to compare against
+    prog = TapeProgram(seed, n_actions=n_actions, size=size, exact=True,
+                       sharded=True, n_shards=n_dev)
+    ref = prog.run(algorithm="greedy", cost_model="comm", backend="xla")
+    got = prog.run(algorithm="greedy", cost_model="comm", backend="xla",
+                   mesh=host_mesh(n_dev))
+    _assert_bitwise(ref, got, f"seed {seed} [mesh({n_dev}) vs single-device]")
+
+
+CHECKS = {"graph": check_graph, "exec": check_exec, "dist": check_dist}
+
+
+def check_seed(seed: int, checks: Sequence[str] = ("graph", "exec"),
+               **kw) -> None:
+    """Run the named differential checks for one seed (raises on failure)."""
+    for name in checks:
+        if name == "graph":
+            check_graph(seed, n_actions=kw.get("n_actions", 20),
+                        size=kw.get("size", 64), sharded=bool(seed % 2))
+        elif name == "exec":
+            check_exec(seed, n_actions=kw.get("n_actions", 20),
+                       size=kw.get("size", 64))
+        elif name == "dist":
+            check_dist(seed, n_actions=kw.get("n_actions", 20),
+                       size=kw.get("size", 64), n_dev=kw.get("n_dev", 0))
+        else:
+            raise ValueError(f"unknown check {name!r}; have {sorted(CHECKS)}")
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    import argparse
+    import sys
+    import time
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=200,
+                    help="number of consecutive seeds to sweep")
+    ap.add_argument("--start", type=int, default=0, help="first seed")
+    ap.add_argument("--only", type=int, default=None,
+                    help="run a single seed (failure repro)")
+    ap.add_argument("--actions", type=int, default=20,
+                    help="generator actions per program")
+    ap.add_argument("--size", type=int, default=64,
+                    help="1-D working-shape elements")
+    ap.add_argument("--checks", default="graph,exec",
+                    help=f"comma list from {sorted(CHECKS)}")
+    ap.add_argument("--dist", action="store_true",
+                    help="append the dist check (needs >= 2 devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    args = ap.parse_args(argv)
+    checks = [c for c in args.checks.split(",") if c]
+    if args.dist and "dist" not in checks:
+        checks.append("dist")
+    seeds = ([args.only] if args.only is not None
+             else list(range(args.start, args.start + args.n)))
+    t0 = time.time()
+    for i, seed in enumerate(seeds):
+        try:
+            check_seed(seed, checks, n_actions=args.actions, size=args.size)
+        except Exception:
+            print(f"\nFAIL seed={seed}  (checks: {','.join(checks)})",
+                  file=sys.stderr)
+            print("repro: PYTHONPATH=src python -m repro.testing.tapegen "
+                  f"--only {seed} --actions {args.actions} "
+                  f"--size {args.size} --checks {','.join(checks)}",
+                  file=sys.stderr, flush=True)
+            raise
+        if (i + 1) % 25 == 0:
+            print(f"  …{i + 1}/{len(seeds)} seeds ok "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    print(f"tapegen: {len(seeds)} seeds x [{','.join(checks)}] "
+          f"differential-identical ({time.time() - t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,314 @@
+"""Measured-cost calibration tests (DESIGN.md §15).
+
+* the executor's profiler hook records warm dispatches with sane features,
+* profiles round-trip through JSON and refuse stale registry versions,
+* ``calibrated`` with zero samples degenerates to its analytic ``tpu`` base,
+* ACCEPTANCE: a fit from measured samples changes lowering decisions on
+  the paper benchmark suite vs the analytic base model,
+* installing a fit bumps the calibration epoch and invalidates merge-cache
+  entries priced under the old coefficients.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import lazy as bh
+from repro.core import make_cost_model
+from repro.core.backends import LoweringContext, select_lowering
+from repro.core.blocks import BlockInfo
+from repro.core.cost import TPUCost
+from repro.core.lazy import fresh_runtime
+from repro.core.tuning import (CalibratedFit, Profile, Profiler,
+                               ProfileSample, StaleProfileError, calibrate,
+                               clear_fit, current_epoch, fit_profile,
+                               install_fit, load_and_install)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_fit():
+    """Every test starts and ends with no installed calibration."""
+    clear_fit()
+    yield
+    clear_fit()
+
+
+def _run_thrice(profiler, backend="xla"):
+    with fresh_runtime(algorithm="greedy", backend=backend,
+                       profiler=profiler):
+        for _ in range(3):
+            x = bh.random((2048,))
+            y = bh.sin(x) * 0.5 + x * 0.25
+            z = float((y * y).sum())
+    return z
+
+
+# ---------------------------------------------------------------------------
+# Profiler capture
+# ---------------------------------------------------------------------------
+
+def test_profiler_records_warm_dispatches_with_features():
+    p = Profiler()
+    _run_thrice(p)
+    assert len(p) > 0, "three identical flushes must produce warm samples"
+    for s in p.profile.samples:
+        assert s.backend == "xla"
+        assert s.wall_s > 0.0
+        assert s.dispatches >= 1
+        assert s.hbm_bytes > 0.0
+        assert s.fabric_bytes == 0.0        # no COMM on a single device
+        assert s.n_ops >= 1
+        assert len(s.sig) == 16             # stable digest, JSON-safe
+
+
+def test_profiler_skips_cold_dispatches():
+    p = Profiler()
+    with fresh_runtime(algorithm="greedy", backend="xla", profiler=p):
+        x = bh.random((256,))
+        float((x * 2.0).sum())              # single flush: everything cold
+    assert len(p) == 0
+
+
+def test_profiler_off_by_default():
+    with fresh_runtime(algorithm="greedy") as rt:
+        assert rt.executor.profiler is None
+
+
+# ---------------------------------------------------------------------------
+# Persistence
+# ---------------------------------------------------------------------------
+
+def _toy_profile():
+    # walls = launch + slope*bytes with launch(xla)=1e-5 < launch(pallas)=4e-5
+    return Profile([
+        ProfileSample("xla", "a" * 16, 2e-5, 1, 4096.0, 0.0, 3),
+        ProfileSample("xla", "b" * 16, 3e-5, 1, 8192.0, 0.0, 4),
+        ProfileSample("pallas", "a" * 16, 6e-5, 1, 4096.0, 0.0, 3),
+        ProfileSample("pallas", "b" * 16, 8e-5, 1, 8192.0, 0.0, 4),
+    ])
+
+
+def test_profile_json_roundtrip(tmp_path):
+    path = str(tmp_path / "profile.json")
+    prof = _toy_profile()
+    prof.save(path)
+    back = Profile.load(path)
+    assert back.samples == prof.samples
+    assert back.backends() == ("pallas", "xla")
+
+
+def test_stale_profile_refused_on_registry_bump(tmp_path, monkeypatch):
+    from repro.core import cost
+    path = str(tmp_path / "profile.json")
+    _toy_profile().save(path)
+    monkeypatch.setattr(cost, "COST_REGISTRY_VERSION",
+                        cost.COST_REGISTRY_VERSION + 1)
+    with pytest.raises(StaleProfileError):
+        Profile.load(path)
+    with pytest.raises(StaleProfileError):
+        load_and_install(path)
+
+
+def test_garbage_schema_refused(tmp_path):
+    path = str(tmp_path / "profile.json")
+    with open(path, "w") as f:
+        f.write('{"schema": "something_else", "samples": []}')
+    with pytest.raises(StaleProfileError):
+        Profile.load(path)
+
+
+def test_load_and_install_warm_start(tmp_path):
+    path = str(tmp_path / "profile.json")
+    _toy_profile().save(path)
+    fit = load_and_install(path)
+    assert fit.n_keys == 4
+    # the toy numbers make pallas strictly more expensive everywhere
+    assert fit.launch_s["pallas"] > fit.launch_s["xla"]
+    m = make_cost_model("calibrated")
+    assert (m.dispatch_price(1, backend="pallas")
+            > m.dispatch_price(1, backend="xla"))
+
+
+# ---------------------------------------------------------------------------
+# Fitting
+# ---------------------------------------------------------------------------
+
+def test_fit_recovers_synthetic_coefficients():
+    # wall = launch*n + slope*bytes, exactly — lstsq must recover both
+    launch, slope = 3e-5, 2e-9
+    samples = [ProfileSample("xla", f"{i:016d}", launch + slope * b,
+                             1, float(b), 0.0, 2)
+               for i, b in enumerate((1024, 4096, 16384, 65536))]
+    fit = fit_profile(Profile(samples))
+    assert fit.launch_s["xla"] == pytest.approx(launch, rel=1e-6)
+    assert fit.hbm_slope_s["xla"] == pytest.approx(slope, rel=1e-6)
+    assert fit.hbm_s_per_byte == pytest.approx(slope, rel=1e-6)
+
+
+def test_fit_empty_profile_is_none():
+    assert fit_profile(Profile()) is None
+
+
+def test_constant_bytes_keep_analytic_slope():
+    from repro.core.cost import HBM_BW
+    samples = [ProfileSample("xla", f"{i:016d}", 1e-5, 1, 4096.0, 0.0, 2)
+               for i in range(3)]
+    fit = fit_profile(Profile(samples))
+    assert fit.hbm_slope_s == {}            # unidentifiable: not fitted
+    assert fit.hbm_s_per_byte == pytest.approx(1.0 / HBM_BW)
+
+
+# ---------------------------------------------------------------------------
+# The calibrated cost model
+# ---------------------------------------------------------------------------
+
+def _work_blocks():
+    with fresh_runtime() as rt:
+        x = bh.random((512,))
+        y = bh.sin(x) * 0.5 + x
+        s = y.sum()
+        out = bh.zeros((512,)) + s.broadcast_to((512,))
+        tape = list(rt.tape)
+        rt.tape.clear()
+        for a in (x, y, s, out):
+            a._alive = False
+    infos = [BlockInfo.from_op(op) for op in tape if not op.is_system()]
+    merged = infos[0]
+    for bi in infos[1:]:
+        merged = merged.merged_with(bi)
+    return infos + [merged]
+
+
+def test_calibrated_zero_samples_is_analytic_base():
+    """Satellite: with no installed fit, ``calibrated`` must price exactly
+    like its analytic ``tpu`` base (same block costs, same dispatch
+    prices), so selecting it is always safe."""
+    cal, tpu = make_cost_model("calibrated"), TPUCost()
+    assert cal.fit is None
+    for b in _work_blocks():
+        assert cal.block_cost(b) == pytest.approx(tpu.block_cost(b))
+    for n in (1, 2, 3):
+        for be in (None, "xla", "pallas"):
+            assert cal.dispatch_price(n, backend=be) == \
+                pytest.approx(tpu.dispatch_price(n, backend=be))
+
+
+def test_calibrated_is_monotone_under_fit():
+    install_fit(CalibratedFit(launch_s={"xla": 1e-4, "pallas": 5e-4},
+                              hbm_slope_s={"xla": 3e-9},
+                              hbm_s_per_byte=3e-9, fabric_s_per_byte=1e-9))
+    m = make_cost_model("calibrated")
+    blocks = _work_blocks()
+    merged = blocks[-1]
+    for b in blocks[:-1]:
+        assert m.merge_saving(b, merged) >= -1e-12
+
+
+def test_fitted_prices_flip_a_tie():
+    install_fit(CalibratedFit(launch_s={"xla": 1e-5, "pallas": 9e-5},
+                              hbm_slope_s={}, hbm_s_per_byte=1e-12,
+                              fabric_s_per_byte=1e-9))
+    m = make_cost_model("calibrated")
+    ctx = LoweringContext()
+    from repro.core.scheduler import plan_blocks
+    with fresh_runtime() as rt:
+        x = bh.random((1024,))
+        y = x * 2.0 + 1.0
+        tape = list(rt.tape)
+        rt.tape.clear()
+        for a in (x, y):
+            a._alive = False
+    plans = plan_blocks(tape, [list(range(len(tape)))])
+    d_analytic = select_lowering(tape, plans[0], ("pallas", "xla"), ctx,
+                                 TPUCost())
+    d_cal = select_lowering(tape, plans[0], ("pallas", "xla"), ctx, m)
+    assert d_analytic.backend == "pallas"    # tie -> preference order
+    assert d_cal.backend == "xla"            # measured overhead flips it
+    assert d_cal.reason_for("pallas") is None  # declined on price, not claim
+
+
+# ---------------------------------------------------------------------------
+# ACCEPTANCE: measured fit changes real decisions on the benchmark suite
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_calibration_changes_benchmark_decisions(tmp_path):
+    path = str(tmp_path / "profile.json")
+    fit = calibrate(seeds=range(2), repeats=3, sizes=(1024, 8192),
+                    save=path)
+    assert fit.n_keys > 0 and fit.n_samples >= fit.n_keys
+    assert os.path.exists(path)
+
+    from benchmarks.programs import BENCHMARKS
+    from repro.core.ir import COMM_OPS
+    ctx = LoweringContext()
+    base_m, cal_m = make_cost_model("tpu"), make_cost_model("calibrated")
+    assert cal_m.fit is not None
+    changed = total = 0
+    for name in ("black_scholes", "heat_equation", "leibnitz_pi"):
+        rows = []
+        with fresh_runtime(algorithm="greedy", cost_model="bohrium") as rt:
+            orig = rt.executor.run_schedule
+
+            def run(schedule, buffers, _orig=orig, rows=rows):
+                for plan in schedule.blocks:
+                    if not plan.has_work:
+                        continue
+                    ops = [schedule.tape[i] for i in plan.op_indices]
+                    if any(o.opcode in COMM_OPS for o in ops):
+                        continue
+                    a = select_lowering(ops, plan, ("pallas", "xla"), ctx,
+                                        base_m)
+                    c = select_lowering(ops, plan, ("pallas", "xla"), ctx,
+                                        cal_m)
+                    rows.append((a.backend, c.backend))
+                return _orig(schedule, buffers)
+
+            rt.executor.run_schedule = run
+            BENCHMARKS[name]()
+        changed += sum(1 for a, c in rows if a != c)
+        total += len(rows)
+    assert total > 0
+    assert changed >= 1, (
+        f"calibrated fit {fit} changed 0/{total} lowering decisions — "
+        "measured prices are indistinguishable from the analytic base")
+
+
+# ---------------------------------------------------------------------------
+# Epoch / merge-cache interaction
+# ---------------------------------------------------------------------------
+
+def test_install_fit_bumps_epoch_and_invalidates_cache():
+    e0 = current_epoch()
+    install_fit(CalibratedFit(launch_s={"xla": 1e-5}))
+    assert current_epoch() == e0 + 1
+
+    def step():
+        x = bh.random((512,))
+        y = x * 2.0 + 1.0
+        return float(y.sum())
+
+    with fresh_runtime(algorithm="greedy", cost_model="calibrated") as rt:
+        step()   # first tape lacks the previous iteration's DELs
+        step()
+        step()
+        assert rt.history[-1]["cached"], "identical tape must hit the cache"
+        install_fit(CalibratedFit(launch_s={"xla": 5e-5}))
+        step()
+        assert not rt.history[-1]["cached"], (
+            "a new fit must invalidate plans priced under the old epoch")
+        step()
+        assert rt.history[-1]["cached"]
+
+
+def test_runtime_accepts_calibrated_model_end_to_end():
+    install_fit(CalibratedFit(launch_s={"xla": 1e-5, "pallas": 2e-5},
+                              hbm_slope_s={"xla": 2e-9},
+                              hbm_s_per_byte=2e-9))
+    with fresh_runtime(algorithm="greedy", cost_model="calibrated",
+                       backend="pallas"):
+        x = bh.asarray(np.arange(512.0))
+        y = bh.sqrt(bh.absolute(x * 2.0 - 3.0))
+        got = y.numpy()
+    np.testing.assert_array_equal(got, np.sqrt(np.abs(np.arange(512.0) * 2.0 - 3.0)))

@@ -25,7 +25,8 @@ from repro.core import lazy as bh
 from repro.core.lazy import fresh_runtime
 
 ALGOS = ("singleton", "linear", "greedy", "unintrusive", "optimal")
-MODELS = ("bohrium", "max_contract", "max_locality", "robinson", "tpu", "tpu_dist")
+MODELS = ("bohrium", "max_contract", "max_locality", "robinson", "tpu",
+          "tpu_dist", "calibrated")
 
 
 # ---------------------------------------------------------------------------
