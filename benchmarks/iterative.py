@@ -1,0 +1,117 @@
+"""Iterative-suite per-iteration wall-clock: loop-fused vs per-flush
+(ISSUE 6 / DESIGN.md §16).
+
+Each program re-traces a structurally identical tape every timestep, so
+with ``loop_fusion=True`` the runtime detects the recurrence, defers the
+steady-state flushes and drains them as single ``fori_loop`` dispatches.
+This harness runs every program twice per mode — a cold run that pays
+tracing/compilation, then a timed warm run — and reports medians over
+``reps`` repeats of two per-iteration times:
+
+* ``wall``  — total wall-clock of the warm run (recording + runtime);
+* ``flush`` — time spent inside ``Runtime.flush`` (``rt.flush_wall_s``
+  delta), i.e. the runtime pipeline the loop fuser actually replaces:
+  recurrence detection, planning, dispatch.  Op *recording* is the user
+  program's Python loop body and is identical in both modes, so the flush
+  metric is the honest measure of "vs the per-flush path"; the wall metric
+  is reported alongside it so the recording floor stays visible.
+
+Correctness rides along: the final array of the loop-fused warm run must
+be bit-identical to the per-flush run's.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+#: (program name, iterations, problem size) — sizes small enough that the
+#: runtime pipeline (not device compute) dominates, iteration counts long
+#: enough to amortize the hysteresis warm-up into the steady state.
+CONFIGS: Tuple[Tuple[str, int, int], ...] = (
+    ("heat_equation", 400, 64),
+    ("sor", 400, 64),
+    ("game_of_life", 300, 48),
+    ("shallow_water", 300, 48),
+    ("lattice_boltzmann", 300, 8),
+)
+
+LOOP_UNROLL = 128
+
+
+def _run(fn: Callable, iters: int, n: int, **rt_kw) -> Dict:
+    """Cold run (compiles, warms the merge cache), then one timed warm
+    run; returns per-iteration wall and flush seconds plus the result."""
+    from repro.core import lazy as bh
+    with bh.fresh_runtime(**rt_kw) as rt:
+        fn(iters=iters, n=n).numpy()
+        f0 = rt.flush_wall_s
+        t0 = time.perf_counter()
+        out = fn(iters=iters, n=n).numpy()
+        wall = time.perf_counter() - t0
+        flush = rt.flush_wall_s - f0
+        deferred = sum(1 for h in rt.history if h.get("loop_deferred"))
+        drains = sum(1 for h in rt.history if h.get("loop_drain"))
+    return {"wall_per_iter_s": wall / iters, "flush_per_iter_s": flush / iters,
+            "result": out, "deferred": deferred, "drains": drains}
+
+
+def run_program(fn: Callable, iters: int, n: int, reps: int = 3) -> Dict:
+    """Median-of-``reps`` per-flush vs loop-fused comparison for one
+    program (medians de-noise the jax async dispatch queue)."""
+    flush_runs = [_run(fn, iters, n, loop_fusion=False)
+                  for _ in range(reps)]
+    loop_runs = [_run(fn, iters, n, loop_fusion=True,
+                      loop_unroll=LOOP_UNROLL) for _ in range(reps)]
+
+    def med(runs: List[Dict], key: str) -> float:
+        return statistics.median(r[key] for r in runs)
+
+    wall0 = med(flush_runs, "wall_per_iter_s")
+    wall1 = med(loop_runs, "wall_per_iter_s")
+    fl0 = med(flush_runs, "flush_per_iter_s")
+    fl1 = med(loop_runs, "flush_per_iter_s")
+    last = loop_runs[-1]
+    return {
+        "iters": iters, "n": n, "reps": reps, "loop_unroll": LOOP_UNROLL,
+        "wall_ms_per_iter_flush": wall0 * 1e3,
+        "wall_ms_per_iter_loop": wall1 * 1e3,
+        "flush_ms_per_iter_flush": fl0 * 1e3,
+        "flush_ms_per_iter_loop": fl1 * 1e3,
+        "speedup_wall": wall0 / wall1 if wall1 else 0.0,
+        "speedup_flush": fl0 / fl1 if fl1 else 0.0,
+        "bit_identical": bool(np.array_equal(flush_runs[-1]["result"],
+                                             last["result"])),
+        # per-mode totals over the whole warm run (2 * iters flushes
+        # happen per runtime; the warm run's share is iters of them)
+        "deferred_fraction": last["deferred"] / max(1, 2 * iters),
+        "drains": last["drains"],
+    }
+
+
+def run_suite(quick: bool = False) -> List[Dict]:
+    from benchmarks import programs
+    rows = []
+    for name, iters, n in CONFIGS:
+        if quick:
+            iters, reps = max(50, iters // 4), 1
+        else:
+            reps = 3
+        fn = getattr(programs, name)
+        row = {"program": name, **run_program(fn, iters, n, reps=reps)}
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run_suite():
+        print(f"{r['program']:18s} wall {r['wall_ms_per_iter_flush']:6.2f}"
+              f"->{r['wall_ms_per_iter_loop']:6.2f}ms/it "
+              f"({r['speedup_wall']:.1f}x)  "
+              f"flush {r['flush_ms_per_iter_flush']:6.3f}"
+              f"->{r['flush_ms_per_iter_loop']:6.3f}ms/it "
+              f"({r['speedup_flush']:.1f}x)  "
+              f"bitwise={r['bit_identical']}")

@@ -31,9 +31,12 @@ def _run(name: str, *, algorithm: str, cost_model: str = "bohrium",
          use_cache: bool = True, jit: bool = True) -> Dict:
     fn = BENCHMARKS[name]
     t0 = time.perf_counter()
+    # loop fusion off: these figures reproduce the paper's per-flush
+    # pipeline (partition cost, merge-cache effect); cross-flush deferral
+    # is the beyond-paper §16 layer measured by benchmarks.iterative
     with fresh_runtime(algorithm=algorithm, cost_model=cost_model,
                        use_cache=use_cache, node_budget=NODE_BUDGET,
-                       jit=jit) as rt:
+                       jit=jit, loop_fusion=False) as rt:
         out = fn()
         _ = np.asarray(out)         # sync
         wall = time.perf_counter() - t0
@@ -73,7 +76,8 @@ def bench_cache(rows: List[str], benches=("heat_equation", "black_scholes",
         cold = _run(name, algorithm="greedy", use_cache=True)
         # warm: run twice in one runtime; measure the second
         fn = BENCHMARKS[name]
-        with fresh_runtime(algorithm="greedy", node_budget=NODE_BUDGET) as rt:
+        with fresh_runtime(algorithm="greedy", node_budget=NODE_BUDGET,
+                           loop_fusion=False) as rt:
             np.asarray(fn())
             t0 = time.perf_counter()
             np.asarray(fn())
@@ -140,7 +144,7 @@ def bench_optimizer(rows: List[str]):
                     f";ops={r['n_ops']}")
     # wall time: fused (greedy, warm cache) vs unfused (singleton)
     for algo in ("singleton", "greedy"):
-        with fresh_runtime(algorithm=algo) as rt:
+        with fresh_runtime(algorithm=algo, loop_fusion=False) as rt:
             for _ in range(3):                      # warm executables+cache
                 record_adamw_tape(rt, n)
                 bh.flush()

@@ -116,6 +116,41 @@ def bench(sizes, ref_cap: int, family: str) -> List[str]:
     return rows
 
 
+def bench_signature(sizes, family: str) -> List[str]:
+    """Merge-cache key construction cost, cold vs memoized (ISSUE 6).
+
+    ``cache.op_struct`` memoizes each op's renumber-independent
+    ``(template, bases)`` pair on the op itself, so every
+    ``tape_signature`` after the first reuses the per-op structural
+    hashing and only pays the first-occurrence renumbering.  The cold
+    column clears the memo (fresh ops), the warm column re-keys the same
+    tape — the steady-state cost every cache-hit flush pays."""
+    from repro.core.cache import tape_signature
+    rows = []
+    make = TAPES[family]
+    for n_ops in sizes:
+        tape = make(n_ops)
+        tape_signature(tape, "greedy", "bohrium")   # process-level warmup
+        t_cold = t_warm = float("inf")              # min-of-3 de-noises GC
+        for _ in range(3):
+            for op in tape:
+                op.__dict__.pop("_sig_struct", None)
+            t0 = time.perf_counter()
+            sig_cold = tape_signature(tape, "greedy", "bohrium")
+            t_cold = min(t_cold, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            sig_warm = tape_signature(tape, "greedy", "bohrium")
+            t_warm = min(t_warm, time.perf_counter() - t0)
+            assert sig_warm == sig_cold
+        line = (f"signature_memo/{family}/{len(tape)}ops,"
+                f"{t_warm * 1e6:.0f},"
+                f"cold={t_cold * 1e3:.2f}ms;warm={t_warm * 1e3:.2f}ms"
+                f";speedup={t_cold / max(t_warm, 1e-9):.1f}x")
+        rows.append(line)
+        print(line, flush=True)
+    return rows
+
+
 def ci_check() -> None:
     """CI smoke: 2k-op tapes must graph+partition in < 5 s on the staged
     engine, and the staged engine must match the reference exactly."""
@@ -142,6 +177,8 @@ def main() -> None:
     ap.add_argument("--ref-cap", type=int, default=1000,
                     help="largest size to also run on the O(V²) reference")
     ap.add_argument("--family", default=None, choices=(None, *TAPES))
+    ap.add_argument("--signature", action="store_true",
+                    help="also report tape_signature cost, cold vs memoized")
     args = ap.parse_args()
     if args.ci:
         ci_check()
@@ -150,6 +187,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for family in ([args.family] if args.family else list(TAPES)):
         bench(sizes, args.ref_cap, family)
+        if args.signature:
+            bench_signature(sizes, family)
 
 
 if __name__ == "__main__":

@@ -148,7 +148,10 @@ def kernel_coverage() -> List[Dict]:
     for name, fn in BENCHMARKS.items():
         counts = {"pallas": 0, "fallback": 0, "comm": 0}
         reasons: Dict[str, int] = {}
-        with fresh_runtime(algorithm="greedy", cost_model="bohrium") as rt:
+        # per-flush execution: the sweep classifies every dispatched block
+        # via run_schedule, which deferred (loop-fused) flushes bypass
+        with fresh_runtime(algorithm="greedy", cost_model="bohrium",
+                           loop_fusion=False) as rt:
             orig = rt.executor.run_schedule
 
             def run(schedule, buffers, _orig=orig, counts=counts,

@@ -1,9 +1,10 @@
 """Canonical perf snapshot — one JSON artifact per commit (ISSUE 4), plus
-the CI perf-regression gate (ISSUE 5).
+the CI perf-regression gate (ISSUE 5) and the cross-flush loop-fusion
+speedup gate (ISSUE 6).
 
-    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_4.json [--quick]
-    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_4.json \\
-        --compare BENCH_4.json --tolerance 0.25      # gate vs the baseline
+    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_6.json [--quick]
+    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_6.json \\
+        --compare BENCH_6.json --tolerance 0.25      # gate vs the baseline
 
 ``--compare`` loads a baseline snapshot (BEFORE overwriting ``--json``) and
 fails the run when any gated metric regresses past ``--tolerance``:
@@ -14,7 +15,11 @@ fails the run when any gated metric regresses past ``--tolerance``:
   the snapshots' ``machine_ref_s`` pure-Python reference measurement;
 * aggregate kernel coverage may not drop below ``base*(1-tol)``;
 * per-program comm-bytes savings (``1 - fused/unfused``) may not drop
-  below ``base*(1-tol)`` minus a 2-point absolute slack.
+  below ``base*(1-tol)`` minus a 2-point absolute slack;
+* loop fusion: every iterative program must stay bit-identical to the
+  per-flush path (no tolerance), at least ``LOOP_MIN_PROGRAMS`` programs
+  must keep a flush-path speedup of ``LOOP_SPEEDUP_FLOOR*(1-tol)``, and no
+  program's speedup may drop below ``base*(1-tol)``.
 
 Aggregates the three benchmark families that gate this repo into a single
 machine-readable snapshot, seeding the bench trajectory (CI runs this and
@@ -31,7 +36,10 @@ the trend):
   bit-identity check;
 * ``mixed_lowering``    — per-backend block counts of one representative
   ``backend='pallas'`` flush (ISSUE 4: the lower stage routing one flush
-  across ≥ 2 backends).
+  across ≥ 2 backends);
+* ``loop_fusion``       — iterative-suite per-iteration wall-clock,
+  loop-fused vs per-flush, with the bitwise-identity check (ISSUE 6
+  metric; see ``benchmarks.iterative`` for the two reported times).
 
 Every section is a summary, not a sweep: the snapshot must stay cheap
 enough to run on every CI push.
@@ -123,6 +131,18 @@ def snap_mixed_lowering() -> Dict:
     return out
 
 
+def snap_loop_fusion(quick: bool) -> List[Dict]:
+    from benchmarks.iterative import run_suite
+    rows = run_suite(quick=quick)
+    for r in rows:
+        print(f"loop_fusion/{r['program']}: "
+              f"flush {r['flush_ms_per_iter_flush']:.3f}"
+              f"->{r['flush_ms_per_iter_loop']:.3f}ms/it "
+              f"({r['speedup_flush']:.1f}x, wall {r['speedup_wall']:.1f}x), "
+              f"identical={r['bit_identical']}", flush=True)
+    return rows
+
+
 def _savings(row: Dict) -> float:
     bu, bf = row.get("bytes_singleton", 0.0), row.get("bytes_greedy", 0.0)
     return (1.0 - bf / bu) if bu else 0.0
@@ -133,6 +153,12 @@ def _savings(row: Dict) -> float:
 # comm savings are quantized by collective counts on tiny meshes.
 TIME_SLACK_S = 0.1
 SAVINGS_SLACK = 0.02
+
+# ISSUE 6 acceptance floor: >= LOOP_MIN_PROGRAMS iterative programs must
+# hold a >= LOOP_SPEEDUP_FLOOR flush-path speedup (the gate applies the
+# run's relative tolerance to the floor, CI machines being noisy).
+LOOP_SPEEDUP_FLOOR = 5.0
+LOOP_MIN_PROGRAMS = 3
 
 
 def machine_ref_s() -> float:
@@ -206,12 +232,38 @@ def compare_snapshots(snap: Dict, base: Dict, tolerance: float) -> List[str]:
             fails.append(
                 f"comm_scaling/{r['program']}/{r.get('devices')}dev: savings "
                 f"{_savings(r):.1%} < {floor:.1%} (base {_savings(b):.1%})")
+    # loop fusion: correctness is absolute, the speedup floor and the
+    # per-program regression check take the relative tolerance
+    loop_rows = snap.get("loop_fusion", [])
+    base_loop = {r["program"]: r for r in base.get("loop_fusion", [])}
+    fast = 0
+    floor = LOOP_SPEEDUP_FLOOR * (1.0 - tolerance)
+    for r in loop_rows:
+        if not r.get("bit_identical", True):
+            fails.append(f"loop_fusion/{r['program']}: loop-fused result "
+                         "not bit-identical to per-flush")
+        sp = r.get("speedup_flush", 0.0)
+        if sp >= floor:
+            fast += 1
+        b = base_loop.get(r["program"])
+        if b is not None:
+            b_floor = b.get("speedup_flush", 0.0) * (1.0 - tolerance)
+            if sp < b_floor:
+                fails.append(
+                    f"loop_fusion/{r['program']}: flush speedup {sp:.1f}x "
+                    f"< {b_floor:.1f}x (base {b['speedup_flush']:.1f}x)")
+    if loop_rows and fast < LOOP_MIN_PROGRAMS:
+        fails.append(
+            f"loop_fusion: only {fast}/{len(loop_rows)} programs reach a "
+            f"{floor:.1f}x flush-path speedup "
+            f"(need {LOOP_MIN_PROGRAMS} at {LOOP_SPEEDUP_FLOOR:.0f}x"
+            f"*(1-tol))")
     return fails
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default="BENCH_4.json",
+    ap.add_argument("--json", default="BENCH_6.json",
                     help="output path for the snapshot JSON")
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer device counts")
@@ -240,6 +292,7 @@ def main() -> None:
         "kernel_coverage": snap_kernel_coverage(),
         "comm_scaling": snap_comm_scaling(devices),
         "mixed_lowering": snap_mixed_lowering(),
+        "loop_fusion": snap_loop_fusion(args.quick),
     }
     snap["wall_s"] = time.time() - t0
     with open(args.json, "w") as f:

@@ -104,3 +104,35 @@ with fresh_runtime(algorithm="greedy", backend="pallas") as rt:
           f"({st['pallas_blocks'] / max(1, run):.0%} coverage)")
     print(f"blocks per backend: {per_backend}")
     print("fallback reasons:", st["pallas_fallbacks"] or "none")
+
+# Cross-flush loop fusion (DESIGN.md §16): an iterative program re-traces
+# the SAME tape every timestep.  The runtime notices — after
+# loop_threshold identical flushes with a stable carried-state mapping it
+# stops executing them one by one: flushes are *deferred* (queued) and
+# later *drained* as ONE jax.lax.fori_loop dispatch over the fused block
+# schedule, bit-identical to per-flush execution.  History shows the
+# transition: per-flush entries carry merge-cache deltas, deferred entries
+# mark the queue depth, drains report how many iterations one dispatch
+# replayed.
+with fresh_runtime(algorithm="greedy", loop_fusion=True,
+                   loop_threshold=3, loop_unroll=32) as rt:
+    x = bh.random((N,))
+    bh.flush()
+    for _ in range(12):                           # x <- x*0.99 + sin(x)*0.01
+        y = x * 0.99 + bh.sin(x) * 0.01
+        x.delete()
+        x = y
+        bh.flush()
+    mean = float(x.sum()) / N                     # SYNC drains the queue
+
+    executed = [h for h in rt.history if "merge_hits" in h]
+    deferred = [h for h in rt.history if h.get("loop_deferred")]
+    drains = [h for h in rt.history if h.get("loop_drain")]
+    print(f"\nloop fusion      mean={mean:+.6f}  "
+          f"{len(executed)} per-flush (warmup, "
+          f"{sum(h['merge_hits'] for h in executed)} merge-cache hits) -> "
+          f"{len(deferred)} deferred -> "
+          f"{sum(d['n_iterations'] for d in drains)} iterations in "
+          f"{len(drains)} fori_loop dispatch(es)")
+print("Steady-state iteration stops paying per-flush planning + dispatch:")
+print("the recurring tape IS the loop body, compiled once (DESIGN.md §16).")

@@ -200,7 +200,7 @@ def available_backends() -> Tuple[str, ...]:
 
 def select_lowering(ops: Sequence, plan, backends: Sequence[str],
                     ctx: LoweringContext,
-                    cost_model=None) -> LoweringDecision:
+                    cost_model=None, amortize: int = 1) -> LoweringDecision:
     """Pick the backend that runs one block.
 
     ``backends`` is the preference-ordered candidate list.  Each candidate
@@ -212,9 +212,11 @@ def select_lowering(ops: Sequence, plan, backends: Sequence[str],
     regardless of backend, so the byte term cancels from the comparison.
     A calibrated model (DESIGN.md §15) prices each candidate at its own
     *measured* per-dispatch overhead and per-byte slope, which is what lets
-    measured reality flip a decision.  Returns a :class:`LoweringDecision`
-    whose ``declined`` tuple keeps the reasons of every backend preferred
-    over the winner."""
+    measured reality flip a decision.  ``amortize`` is the unroll factor
+    when the block is being re-lowered for a fused cross-flush loop body
+    (DESIGN.md §16): launch overhead amortizes over the loop, byte traffic
+    does not.  Returns a :class:`LoweringDecision` whose ``declined`` tuple
+    keeps the reasons of every backend preferred over the winner."""
     order = {n: i for i, n in enumerate(backends)}
     declined = []
     claimants = []
@@ -244,7 +246,8 @@ def select_lowering(ops: Sequence, plan, backends: Sequence[str],
 
         def price(be: LoweringBackend) -> float:
             n = be.dispatches(ops, plan, ctx)
-            return (cost_model.lowering_price(n, ext_bytes, backend=be.name)
+            return (cost_model.lowering_price(n, ext_bytes, backend=be.name,
+                                              amortize=amortize)
                     if cost_model is not None else float(n))
         best = min(claimants, key=lambda be: (price(be), order[be.name]))
     cut = order[best.name]

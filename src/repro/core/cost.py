@@ -57,7 +57,8 @@ class CostModel:
         return self.block_cost(b1) + self.block_cost(b2) - self.block_cost(merged)
 
     def dispatch_price(self, n_dispatches: int,
-                       backend: Optional[str] = None) -> float:
+                       backend: Optional[str] = None,
+                       amortize: int = 1) -> float:
         """Price of ``n`` executable dispatches for one block — the
         per-backend term the scheduler's lower stage minimizes when picking
         a block's lowering backend (DESIGN.md §14).  Models with a
@@ -67,19 +68,29 @@ class CostModel:
         ``backend`` names the candidate being priced: the analytic models
         ignore it (one launch price fits all), while ``calibrated`` prices
         each backend at its *fitted* per-dispatch overhead — the hook that
-        lets measured reality flip a lowering decision (DESIGN.md §15)."""
-        return getattr(self, "launch_s", 1.0) * float(n_dispatches)
+        lets measured reality flip a lowering decision (DESIGN.md §15).
+        ``amortize`` is the unroll factor of a fused cross-flush loop
+        (DESIGN.md §16): inside a ``fori_loop`` body the launch overhead is
+        paid once per *loop* dispatch rather than once per iteration, so
+        the per-iteration dispatch price divides by the unroll — keeping
+        calibrated launch costs truthful when re-lowering a loop body."""
+        return (getattr(self, "launch_s", 1.0) * float(n_dispatches)
+                / max(1, amortize))
 
     def lowering_price(self, n_dispatches: int, ext_bytes: float,
-                       backend: Optional[str] = None) -> float:
+                       backend: Optional[str] = None,
+                       amortize: int = 1) -> float:
         """Full per-backend price of running one block on ``backend`` — what
         ``select_lowering`` actually minimizes.  The analytic default is
         just :meth:`dispatch_price`: every backend moves the same external
         bytes at the same assumed bandwidth, so the byte term cancels out
         of the comparison.  Calibrated models price per-backend byte slopes
         too (an interpreter moves a byte slower than a fused kernel), which
-        is measurable and does NOT cancel."""
-        return self.dispatch_price(n_dispatches, backend=backend)
+        is measurable and does NOT cancel.  Only the dispatch term
+        amortizes under ``amortize`` — external bytes move every loop
+        iteration."""
+        return self.dispatch_price(n_dispatches, backend=backend,
+                                   amortize=amortize)
 
 
 class BohriumCost(CostModel):
@@ -429,17 +440,21 @@ class CalibratedCost(TPUCost):
         return base + block_comm_bytes(b.ops) * self.fabric_s_per_byte
 
     def dispatch_price(self, n_dispatches: int,
-                       backend: Optional[str] = None) -> float:
+                       backend: Optional[str] = None,
+                       amortize: int = 1) -> float:
         per = self.fit.launch_for(backend) if self.fit is not None else None
-        return (per if per is not None else self.launch_s) * float(n_dispatches)
+        return ((per if per is not None else self.launch_s)
+                * float(n_dispatches) / max(1, amortize))
 
     def lowering_price(self, n_dispatches: int, ext_bytes: float,
-                       backend: Optional[str] = None) -> float:
+                       backend: Optional[str] = None,
+                       amortize: int = 1) -> float:
         slope = (self.fit.hbm_slope_for(backend) if self.fit is not None
                  else None)
         if slope is None:
             slope = 1.0 / self.hbm_bw
-        return (self.dispatch_price(n_dispatches, backend=backend)
+        return (self.dispatch_price(n_dispatches, backend=backend,
+                                    amortize=amortize)
                 + slope * float(ext_bytes))
 
 

@@ -20,6 +20,16 @@ from typing import Dict, Optional, Tuple
 
 MeshShape = Tuple[Tuple[str, int], ...]          # sorted ((axis, size), ...)
 
+# Process-wide "has any ShardSpec ever been constructed" latch.  The flush
+# fast path consults it to skip the per-flush ``tape_has_sharding`` scan in
+# the (overwhelmingly common) fully-local case; it never resets, so it can
+# only err on the side of scanning.
+_SPECS_SEEN = False
+
+
+def sharding_ever_used() -> bool:
+    return _SPECS_SEEN
+
 
 @dataclass(frozen=True)
 class ShardSpec:
@@ -38,6 +48,8 @@ class ShardSpec:
         if len(self.shape) != len(self.mesh_axes):
             raise ValueError(
                 f"mesh_axes {self.mesh_axes} must match shape {self.shape}")
+        global _SPECS_SEEN
+        _SPECS_SEEN = True
 
     # -- geometry ------------------------------------------------------
     def axis_size(self, axis: Optional[str]) -> int:

@@ -26,6 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# block_signature moved to ``repro.core.cache`` (memoized per-op templates);
+# re-exported here because it began life as the executable-cache key and
+# callers historically import it from the executor.
+from .cache import block_signature                              # noqa: F401
 from .ir import COMM_OPS, Op, View
 
 _UNARY = {
@@ -252,28 +256,6 @@ def make_block_fn(ops: Sequence[Op], seed: int = 0):
     return fn, inputs, outputs
 
 
-def block_signature(ops: Sequence[Op]) -> Tuple:
-    """Canonical structural key for the compiled-executable cache: base uids
-    renumbered by first occurrence so loop iterations share executables."""
-    remap: Dict[int, int] = {}
-
-    def r(uid: int) -> int:
-        return remap.setdefault(uid, len(remap))
-
-    sig = []
-    for op in ops:
-        ins = tuple(
-            (r(v.base.uid), v.base.size, str(v.dtype), v.offset, v.shape,
-             v.strides) if isinstance(v, View)
-            else ("lit", float(v)) for v in op.inputs)
-        out = (r(op.out.base.uid), op.out.base.size, str(op.out.dtype),
-               op.out.offset, op.out.shape, op.out.strides) if op.out is not None else None
-        sig.append((op.opcode, out, ins, op.axis,
-                    tuple(sorted(r(b.uid) for b in op.new_bases)),
-                    tuple(sorted(r(b.uid) for b in op.del_bases)),
-                    tuple(sorted((r(b.uid), b.size, str(b.dtype))
-                                 for b in (*op.del_bases, *op.sync_bases)))))
-    return tuple(sig)
 
 
 def stats_delta(before: Dict, after: Dict) -> Dict:
@@ -358,6 +340,7 @@ class BlockExecutor:
                     "exec_cache_misses": 0, "donated_buffers": 0,
                     "pallas_blocks": 0, "pallas_fallback_blocks": 0,
                     "pallas_fallbacks": {},
+                    "loop_flushes": 0, "loop_iterations": 0,
                     "backend_blocks": {n: 0 for n in self.backends},
                     "backend_fallbacks": {n: {} for n in self.backends}}
         if "shard_map" in self.backends:
@@ -558,3 +541,49 @@ class BlockExecutor:
                         self.sync_store[b.uid] = buffers[b.uid]
                 for b in op.del_bases:
                     buffers.pop(b.uid, None)
+
+    def run_loop(self, loop_plan, state: Sequence, invariants: Sequence,
+                 salts, n: int) -> Tuple:
+        """Dispatch ONE fused steady-state loop executable (DESIGN.md §16).
+
+        ``loop_plan`` is the scheduler's :class:`~repro.core.scheduler
+        .LoopPlan`; ``state`` holds the carried buffers (one per tape-level
+        output, canonical order, initialized from the last executed flush's
+        outputs), ``invariants`` the loop-invariant input buffers,
+        ``salts`` the stacked per-iteration RNG salt matrix padded to the
+        executable's capacity, and ``n`` how many of those iterations to
+        run.  Returns the final state buffers.
+
+        The executable lives in the same cache as per-block functions under
+        ``("loop", plan key, capacity, donate)`` — one compile serves every
+        drain size up to ``capacity`` because ``n`` is a traced argument.
+        The whole state pytree is donated when the platform supports
+        donation and no state buffer is aliased by ``sync_store`` (a
+        materialized snapshot must survive the dispatch); invariants are
+        never donated."""
+        ctx = self.lowering_context()
+        donate = False
+        if self.jit and self.donation_enabled():
+            synced = {id(b) for b in self.sync_store.values()}
+            donate = not any(id(b) in synced for b in state)
+        key = ("loop", loop_plan.key, int(salts.shape[0]), donate)
+        cached = self._cache.get(key)
+        if cached is not None:
+            self.stats["exec_cache_hits"] += 1
+            fn = cached[0]
+        else:
+            self.stats["exec_cache_misses"] += 1
+            from .backends.loop_body import build_loop_fn
+            fn = build_loop_fn(loop_plan.tape, loop_plan.plans,
+                               loop_plan.input_sources,
+                               loop_plan.tape_inputs,
+                               loop_plan.tape_outputs, ctx)
+            if self.jit:
+                fn = jax.jit(fn, donate_argnums=(3,) if donate else ())
+            self._cache[key] = (fn,)
+        self.stats["loop_flushes"] += 1
+        self.stats["loop_iterations"] += int(n)
+        if donate:
+            self.stats["donated_buffers"] += len(state)
+        return tuple(fn(jnp.int32(n), salts, tuple(invariants),
+                        tuple(state)))

@@ -12,6 +12,7 @@ via explicit ``.delete()``.
 from __future__ import annotations
 
 import contextlib
+import time
 from collections import deque
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -26,6 +27,8 @@ jax.config.update("jax_enable_x64", True)
 
 from .algorithms import PartitionResult
 from .cache import MergeCache
+from .dist import insert_resharding, tape_has_sharding
+from .dist.spec import sharding_ever_used
 from .executor import BlockExecutor
 from .ir import BaseArray, Op, View
 from .scheduler import Scheduler
@@ -70,13 +73,28 @@ class Runtime:
         block dispatches are timed to completion and recorded for
         cost-model calibration (DESIGN.md §15).  Profiling sacrifices the
         async dispatch pipeline — attach one only to calibrate.
+    loop_fusion : fuse across the flush boundary (DESIGN.md §16): when
+        consecutive flushes re-trace a structurally identical tape with a
+        consistent carried-state mapping, steady-state flushes are
+        deferred and executed in batches as ONE compiled
+        ``jax.lax.fori_loop`` over the fused block schedule — per-
+        iteration dispatch and host sync disappear.  Bitwise-identical to
+        per-flush execution; any materialization / structure change first
+        drains the queue in program order.
+    loop_threshold : recurrence hysteresis — a tape's first
+        ``loop_threshold`` occurrences execute per-flush; deferral starts
+        at occurrence ``loop_threshold + 1``.
+    loop_unroll : max deferred iterations per fused loop dispatch (also
+        the loop executable's salt capacity — one compile per structure
+        serves every drain size).
     """
 
     def __init__(self, algorithm: str = "greedy", cost_model: str = "bohrium",
                  use_cache: bool = True, node_budget: int = 100_000,
                  seed: int = 0, jit: bool = True, backend="xla",
                  donate="auto", mesh=None, history_limit: int = 1024,
-                 profiler=None):
+                 profiler=None, loop_fusion: bool = True,
+                 loop_threshold: int = 3, loop_unroll: int = 32):
         self.algorithm = algorithm
         self.cost_model = cost_model
         self.use_cache = use_cache
@@ -88,12 +106,19 @@ class Runtime:
         self.executor = BlockExecutor(seed=seed, jit=jit, backend=backend,
                                       donate=donate, mesh=mesh,
                                       profiler=profiler)
+        from .loop import LoopFuser
+        self._loop = (LoopFuser(threshold=loop_threshold, unroll=loop_unroll)
+                      if loop_fusion else None)
         self._known: set = set()
         self._refcount: Dict[int, int] = {}
         self._bases: Dict[int, BaseArray] = {}
         self._flushing = False
         self._ordinal = 0            # runtime-local op counter (RNG salts)
         self.flushes = 0
+        #: cumulative wall-clock spent inside ``flush`` — the runtime
+        #: pipeline only (detection, planning, dispatch), NOT the user
+        #: program's op recording; benchmarks read deltas of this
+        self.flush_wall_s = 0.0
         self.last_partition: Optional[PartitionResult] = None
         #: per-flush records: planning stats plus an ``"exec"`` dict of
         #: per-flush executor stat deltas (NOT cumulative totals)
@@ -101,10 +126,14 @@ class Runtime:
 
     # -- recording -----------------------------------------------------
     def record(self, op: Op) -> None:
+        # a base is pre-existing if it's on this tape already, in the buffer
+        # store, or live in the deferred loop-fusion queue (DESIGN.md §16:
+        # deferred outputs haven't materialized yet but logically exist)
+        live = self._loop.live if self._loop is not None else ()
         new = []
         for v in (*op.in_views(), *op.out_views()):
             u = v.base.uid
-            if u not in self._known and u not in self.buffers:
+            if u not in self._known and u not in self.buffers and u not in live:
                 new.append(v.base)
                 self._known.add(u)
         if new:
@@ -124,7 +153,9 @@ class Runtime:
         if c <= 1:
             del self._refcount[base.uid]
             self._bases.pop(base.uid, None)
-            if base.uid in self._known or base.uid in self.buffers:
+            if (base.uid in self._known or base.uid in self.buffers
+                    or (self._loop is not None
+                        and base.uid in self._loop.live)):
                 self.record(Op("del", None, del_bases=frozenset({base})))
         else:
             self._refcount[base.uid] = c - 1
@@ -133,17 +164,40 @@ class Runtime:
     def flush(self) -> None:
         """Run the staged pipeline on the recorded tape: the scheduler plans
         (graph → partition → schedule, with the merge cache short-circuiting
-        the first two), then the executor dispatches the block plans."""
-        if not self.tape or self._flushing:
+        the first two), then the executor dispatches the block plans.
+
+        With loop fusion on (DESIGN.md §16) a recurring steady-state tape is
+        *deferred* instead: the iteration is queued and executed later —
+        with the rest of its batch — as one compiled ``fori_loop`` dispatch
+        (``LoopFuser.fuse``).  Calling ``flush()`` with an EMPTY tape drains
+        any queued iterations, as does any tape that breaks the recurrence
+        (a SYNC, a structure change)."""
+        if self._flushing:
+            return
+        fus = self._loop
+        if not self.tape:
+            if fus is not None and fus.pending:
+                self._flushing = True
+                t0 = time.perf_counter()
+                try:
+                    fus.drain(self)
+                finally:
+                    self._flushing = False
+                    self.flush_wall_s += time.perf_counter() - t0
             return
         self._flushing = True
+        t0 = time.perf_counter()
         try:
             tape, self.tape = self.tape, []
-            from .dist import insert_resharding, tape_has_sharding
-            if tape_has_sharding(tape):
+            if sharding_ever_used() and tape_has_sharding(tape):
                 # placement disagreements become explicit COMM graph nodes
                 # BEFORE partitioning, so WSP prices interconnect traffic
                 tape = insert_resharding(tape)
+            h0, m0 = self.cache.hits, self.cache.misses
+            if fus is not None and fus.fuse(self, tape):
+                self._known = set()
+                self.flushes += 1
+                return
             topo_fn = getattr(self.executor, "topology_key", None)
             sched = self.scheduler.plan(
                 tape, algorithm=self.algorithm,
@@ -159,15 +213,20 @@ class Runtime:
                          "cached": False, **sched.stats}
             else:
                 entry = {"n_ops": len(tape), "cached": True, **sched.stats}
+            entry["merge_hits"] = self.cache.hits - h0
+            entry["merge_misses"] = self.cache.misses - m0
             before = self.executor.snapshot_stats()
             self.executor.run_schedule(sched, self.buffers)
             from .executor import stats_delta
             entry["exec"] = stats_delta(before, self.executor.stats)
+            if fus is not None:
+                fus.mark_executed()
             self.history.append(entry)
             self._known = set()
             self.flushes += 1
         finally:
             self._flushing = False
+            self.flush_wall_s += time.perf_counter() - t0
 
     def materialize(self, view: View) -> np.ndarray:
         self.record(Op("sync", None, sync_bases=frozenset({view.base})))

@@ -285,6 +285,78 @@ class TapeProgram:
         return tape
 
 
+class IterativeProgram:
+    """A seeded *iterative* lazy program: one randomly-drawn step body
+    replayed ``steps`` times with carried state and a flush per step — the
+    workload shape cross-flush loop fusion (DESIGN.md §16) detects and
+    defers.
+
+    The step recipe is drawn ONCE from the seed and replayed verbatim, so
+    every step traces a structurally identical tape.  The recipe mixes the
+    carry shapes the recurrence detector must prove safe: in-place partial
+    writes (same base every step), fresh-chain carries (new base each step,
+    old base deleted), loop-invariant reads, contracted temporaries,
+    reductions fed back through RMW partial writes, and per-step quantized
+    ``random`` draws (fresh trace-time salts each step — the loop path must
+    reproduce them bit for bit from its stacked salt matrix).  Only the
+    final state materializes; intermediate steps must never be observable.
+    """
+
+    def __init__(self, seed: int, *, steps: int = 9, n_ops: int = 6,
+                 size: int = 64):
+        self.seed = int(seed)
+        self.steps = int(steps)
+        self.n_ops = int(n_ops)
+        self.size = max(64, int(size) - int(size) % 8)
+
+    def run(self, **runtime_kw) -> List[np.ndarray]:
+        from repro.core import lazy as bh
+        from repro.core.lazy import fresh_runtime
+        rnd = random.Random(self.seed ^ 0x17E5A71)
+        n = self.size
+        shapes = {"1d": (n,), "2d": (8, n // 8)}
+        # the step recipe: drawn once, replayed identically every step
+        recipe = [(rnd.randrange(6), rnd.choice((0.5, 0.25, 2.0, 3.0, -1.5)))
+                  for _ in range(self.n_ops)]
+        with fresh_runtime(**runtime_kw):
+            g = bh.floor(bh.random(shapes["2d"]) * 16.0)
+            a = bh.floor(bh.random(shapes["1d"]) * 16.0)
+            k = bh.full(shapes["1d"], float(rnd.randrange(1, 7)))  # invariant
+            bh.flush()
+            for _step in range(self.steps):
+                for act, c in recipe:
+                    if act == 0:           # in-place stencil update (RMW)
+                        inner = (g[1:-1, :] + g[:-2, :] + g[2:, :]) * 0.25
+                        g[1:-1, :] = bh.floor(inner)
+                        inner.delete()
+                    elif act == 1:         # fresh-chain carry on `a`
+                        b = bh.floor((a * c) % _MOD) + k
+                        a.delete()
+                        a = b
+                    elif act == 2:         # per-step RNG draw
+                        r = bh.floor(bh.random(shapes["1d"]) * 16.0)
+                        b = a + r
+                        a.delete()
+                        r.delete()
+                        a = b
+                    elif act == 3:         # reduction fed back through RMW
+                        s = g.sum(0)
+                        a[0: n // 8] = bh.floor((s + a[0: n // 8]) % _MOD)
+                        s.delete()
+                    elif act == 4:         # in-place whole-array update
+                        a += k * c
+                    elif act == 5:         # where-mix into `g`, full write
+                        m = a[0: n // 8].broadcast_to(shapes["2d"])
+                        t = bh.where(g > m, g, m)
+                        g[:, :] = t
+                        t.delete()
+                bh.flush()
+            outs = [g.numpy(), a.numpy(), k.numpy()]
+            for arr in (g, a, k):
+                arr._alive = False         # no DELs after harvest
+        return outs
+
+
 # ---------------------------------------------------------------------------
 # Differential checks
 # ---------------------------------------------------------------------------
@@ -347,7 +419,26 @@ def check_dist(seed: int, *, n_actions: int = 20, size: int = 64,
     _assert_bitwise(ref, got, f"seed {seed} [mesh({n_dev}) vs single-device]")
 
 
-CHECKS = {"graph": check_graph, "exec": check_exec, "dist": check_dist}
+def check_loop(seed: int, *, n_actions: int = 6, size: int = 64,
+               steps: int = 9) -> None:
+    """Loop-fused steady-state execution == per-flush execution, bitwise.
+
+    A small threshold/unroll (2/4) forces the interesting transitions in
+    one program: per-flush warmup, deferral, a capacity drain mid-run AND a
+    tail drain at the final materialization.  Checked on both the XLA and
+    the Pallas backend stacks (the loop body composes whatever per-block
+    backends the lower stage picked)."""
+    prog = IterativeProgram(seed, steps=steps, n_ops=n_actions, size=size)
+    for backend in ("xla", "pallas"):
+        ref = prog.run(loop_fusion=False, backend=backend)
+        got = prog.run(loop_fusion=True, loop_threshold=2, loop_unroll=4,
+                       backend=backend)
+        _assert_bitwise(ref, got,
+                        f"seed {seed} [{backend} loop-fused vs per-flush]")
+
+
+CHECKS = {"graph": check_graph, "exec": check_exec, "dist": check_dist,
+          "loop": check_loop}
 
 
 def check_seed(seed: int, checks: Sequence[str] = ("graph", "exec"),
@@ -363,6 +454,9 @@ def check_seed(seed: int, checks: Sequence[str] = ("graph", "exec"),
         elif name == "dist":
             check_dist(seed, n_actions=kw.get("n_actions", 20),
                        size=kw.get("size", 64), n_dev=kw.get("n_dev", 0))
+        elif name == "loop":
+            check_loop(seed, n_actions=max(3, kw.get("n_actions", 20) // 3),
+                       size=kw.get("size", 64))
         else:
             raise ValueError(f"unknown check {name!r}; have {sorted(CHECKS)}")
 
@@ -381,7 +475,7 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="generator actions per program")
     ap.add_argument("--size", type=int, default=64,
                     help="1-D working-shape elements")
-    ap.add_argument("--checks", default="graph,exec",
+    ap.add_argument("--checks", default="graph,exec,loop",
                     help=f"comma list from {sorted(CHECKS)}")
     ap.add_argument("--dist", action="store_true",
                     help="append the dist check (needs >= 2 devices, e.g. "
