@@ -19,7 +19,10 @@ fails the run when any gated metric regresses past ``--tolerance``:
 * loop fusion: every iterative program must stay bit-identical to the
   per-flush path (no tolerance), at least ``LOOP_MIN_PROGRAMS`` programs
   must keep a flush-path speedup of ``LOOP_SPEEDUP_FLOOR*(1-tol)``, and no
-  program's speedup may drop below ``base*(1-tol)``.
+  program's speedup may drop below ``base*(1-tol)``;
+* observability: one disabled ``obs.trace.span()`` call may not exceed
+  ``OBS_SPAN_NS_CEILING`` nanoseconds (absolute — a property of the
+  disabled fast path, not of the workload or machine baseline).
 
 Aggregates the three benchmark families that gate this repo into a single
 machine-readable snapshot, seeding the bench trajectory (CI runs this and
@@ -39,7 +42,9 @@ the trend):
   across ≥ 2 backends);
 * ``loop_fusion``       — iterative-suite per-iteration wall-clock,
   loop-fused vs per-flush, with the bitwise-identity check (ISSUE 6
-  metric; see ``benchmarks.iterative`` for the two reported times).
+  metric; see ``benchmarks.iterative`` for the two reported times);
+* ``obs``               — disabled-tracing span overhead (ns/call) and the
+  span-count profile of one canonical traced flush (ISSUE 7 metric).
 
 Every section is a summary, not a sweep: the snapshot must stay cheap
 enough to run on every CI push.
@@ -131,6 +136,37 @@ def snap_mixed_lowering() -> Dict:
     return out
 
 
+def snap_obs() -> Dict:
+    """Observability overhead + per-flush span profile (ISSUE 7 metric).
+
+    ``span_ns_disabled`` measures one disabled ``obs.trace.span()`` call
+    (the cost every instrumented stage pays when no tracer is installed);
+    ``--compare`` gates it at ``OBS_SPAN_NS_CEILING`` absolutely — this is
+    a per-call property of the fast path, not a workload measurement, so no
+    baseline is needed.  ``span_counts`` records the event profile of one
+    canonical traced flush (the chain program), pinning how chatty the
+    instrumentation is per flush."""
+    import numpy as np
+    from repro.core import lazy as bh
+    from repro.core.lazy import fresh_runtime
+    from repro.core.obs import trace
+    ns = trace.disabled_span_overhead_ns()
+    tr = trace.Tracer()
+    trace.enable(tr)
+    try:
+        with fresh_runtime(algorithm="greedy") as rt:
+            x = bh.asarray(np.linspace(0.0, 1.0, 4096))
+            y = (bh.sin(x) * 0.5 + x * 0.25) * 2.0
+            float(y.sum().numpy())
+    finally:
+        trace.disable()
+    out = {"span_ns_disabled": ns, "span_counts": tr.span_counts(),
+           "n_events": len(tr.events)}
+    print(f"obs: disabled span {ns:.0f}ns/call, "
+          f"{out['n_events']} events for the canonical flush", flush=True)
+    return out
+
+
 def snap_loop_fusion(quick: bool) -> List[Dict]:
     from benchmarks.iterative import run_suite
     rows = run_suite(quick=quick)
@@ -159,6 +195,12 @@ SAVINGS_SLACK = 0.02
 # run's relative tolerance to the floor, CI machines being noisy).
 LOOP_SPEEDUP_FLOOR = 5.0
 LOOP_MIN_PROGRAMS = 3
+
+# ISSUE 7 acceptance ceiling: one disabled obs.trace.span() call must stay
+# under this many nanoseconds.  Absolute (no baseline, no tolerance): the
+# disabled fast path is one global load + `is None` test by construction,
+# and CI machines comfortably do that in tens of ns.
+OBS_SPAN_NS_CEILING = 100.0
 
 
 def machine_ref_s() -> float:
@@ -258,6 +300,12 @@ def compare_snapshots(snap: Dict, base: Dict, tolerance: float) -> List[str]:
             f"{floor:.1f}x flush-path speedup "
             f"(need {LOOP_MIN_PROGRAMS} at {LOOP_SPEEDUP_FLOOR:.0f}x"
             f"*(1-tol))")
+    # observability: the disabled-tracing span cost is gated absolutely —
+    # it depends only on the fresh snapshot (see OBS_SPAN_NS_CEILING)
+    span_ns = snap.get("obs", {}).get("span_ns_disabled")
+    if span_ns is not None and span_ns > OBS_SPAN_NS_CEILING:
+        fails.append(f"obs: disabled span() costs {span_ns:.0f}ns/call > "
+                     f"{OBS_SPAN_NS_CEILING:.0f}ns ceiling")
     return fails
 
 
@@ -293,6 +341,7 @@ def main() -> None:
         "comm_scaling": snap_comm_scaling(devices),
         "mixed_lowering": snap_mixed_lowering(),
         "loop_fusion": snap_loop_fusion(args.quick),
+        "obs": snap_obs(),
     }
     snap["wall_s"] = time.time() - t0
     with open(args.json, "w") as f:

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --calibrate
+    PYTHONPATH=src python examples/quickstart.py --trace [trace.json]
 
 Write NumPy-ish code against ``repro.core.lazy``; operations record array
 bytecode instead of executing.  On materialization the tape is partitioned
@@ -11,9 +12,24 @@ into fused kernels by a WSP algorithm under a cost model — both selectable.
 profile seeded workloads on every backend, least-squares-fit the cost
 coefficients, and show the ``calibrated`` cost model re-deciding block
 lowerings from measured prices rather than datasheet guesses.
+
+``--trace`` records the whole run with the span tracer (DESIGN.md §17) and
+exports a Chrome trace-event JSON — load it in https://ui.perfetto.dev (or
+``chrome://tracing``) to see every flush's stages, block dispatches and
+loop-fuser transitions on one timeline.
 """
 
 import sys
+
+TRACE_PATH = None
+if "--trace" in sys.argv[1:]:
+    _i = sys.argv.index("--trace")
+    TRACE_PATH = (sys.argv[_i + 1]
+                  if len(sys.argv) > _i + 1
+                  and not sys.argv[_i + 1].startswith("-")
+                  else "quickstart_trace.json")
+    from repro.core.obs import trace as _trace
+    _trace.enable()
 
 import numpy as np
 
@@ -136,3 +152,52 @@ with fresh_runtime(algorithm="greedy", loop_fusion=True,
           f"{len(drains)} fori_loop dispatch(es)")
 print("Steady-state iteration stops paying per-flush planning + dispatch:")
 print("the recurring tape IS the loop body, compiled once (DESIGN.md §16).")
+
+# Explain (DESIGN.md §17): for any flush, the runtime can tell you WHY it
+# fused and lowered the way it did — every merge the partitioner took or
+# rejected (priced), and every backend's claim/decline verdict per block.
+# This program mixes a fusible chain, a shifted in-place update (a Def. 12
+# fuse-forbidden pattern the partitioner must reject a priced merge for)
+# and a matmul (opaque to the Pallas codegen, so pallas declines it).
+from repro.core.obs import explain
+
+with fresh_runtime(algorithm="greedy", backend="pallas") as rt:
+    x = bh.asarray(np.linspace(0.0, 1.0, N))
+    v = bh.random((N,))
+    force = bh.sin(x) * 0.3 - x * 0.01
+    v += force * 0.5
+    t = v * 2.0
+    x[1:] = t[:-1]                         # shifted write: cannot fuse up
+    a = bh.asarray(np.arange(64.0).reshape(8, 8))
+    mm = bh.matmul(a, a)                   # pallas declines: opcode
+    total = float((x.sum() + mm.sum()).numpy())
+
+    rep = explain(rt)
+    print(f"\nexplain: {rep.n_ops} ops -> {rep.n_blocks} blocks "
+          f"(cost={rep.cost:.0f}); "
+          f"{len(rep.taken_merges())} merges taken, "
+          f"{len(rep.rejected_merges())} rejected")
+    work = sorted((b for b in rep.blocks if b.backend), key=lambda b: -b.n_ops)
+    for b in work[:3]:                     # the 3 largest fused blocks
+        print(f"  block[{b.index}] {b.n_ops} ops -> {b.backend}  "
+              f"({b.ext_bytes:.0f} ext bytes)")
+    rej = rep.rejected_merges()
+    if rej:
+        m = rej[0]
+        print(f"  rejected merge: {len(m.u_ops)}+{len(m.v_ops)} ops, "
+              f"would save {m.saving:.0f} — {m.reason}")
+    print("  backend verdicts:")
+    for b in work:
+        row = "  ".join(
+            (f"{v.backend}={'*' if v.winner else 'claimed'}"
+             f"(price {v.price:.3g})") if v.claimed
+            else f"{v.backend}=declined({v.reason})"
+            for v in b.verdicts)
+        print(f"    block[{b.index}]: {row}")
+print("Full report: PYTHONPATH=src python -m tools.explain [--json].")
+
+if TRACE_PATH:
+    _tr = _trace.disable()
+    _tr.export_chrome(TRACE_PATH)
+    print(f"\nChrome trace -> {TRACE_PATH} ({len(_tr.events)} events; "
+          "load in https://ui.perfetto.dev)")

@@ -25,6 +25,7 @@ from .blocks import BlockInfo
 from .cost import make_cost_model
 from .fusion import WSPGraph, build_graph, build_graph_reference
 from .ir import Op
+from .obs import trace
 from .partition import PartitionState, _ekey
 
 
@@ -42,11 +43,31 @@ class PartitionResult:
 
 # ---------------------------------------------------------------------------
 
+def _log_merge(merge_log: Optional[List[Dict]], state: PartitionState,
+               action: str, u: int, v: int, saving: float,
+               reason: Optional[str] = None) -> None:
+    """Append one merge-decision record (obs/explain schema).  Must run
+    BEFORE ``state.merge`` — the sides are the blocks' tape-index sets at
+    decision time and ``merge`` folds v's into u's."""
+    if merge_log is None:
+        return
+    merge_log.append({"action": action, "saving": float(saving),
+                      "u_ops": tuple(sorted(state.members[u])),
+                      "v_ops": tuple(sorted(state.members[v])),
+                      "reason": reason})
+
+
+def _reject_reason(state: PartitionState, u: int, v: int) -> str:
+    """Why ``legal_merge(u, v)`` said no (Def. 5's two conditions)."""
+    return ("fuse-forbidden" if v in state.fuse[u] else "dependency-cycle")
+
+
 def singleton(state: PartitionState) -> PartitionState:
     return state
 
 
-def linear(state: PartitionState) -> PartitionState:
+def linear(state: PartitionState,
+           merge_log: Optional[List[Dict]] = None) -> PartitionState:
     """§IV-E: sweep the tape, extending the current block while legal."""
     n = state.graph.n()
     if n == 0:
@@ -55,13 +76,19 @@ def linear(state: PartitionState) -> PartitionState:
     for i in range(1, n):
         b = state.block_of[i]
         if state.legal_merge(cur, b):
+            _log_merge(merge_log, state, "merged", cur, b,
+                       state.weights.get(_ekey(cur, b), 0.0))
             cur = state.merge(cur, b)
         else:
+            _log_merge(merge_log, state, "rejected", cur, b,
+                       state.weights.get(_ekey(cur, b), 0.0),
+                       reason=_reject_reason(state, cur, b))
             cur = b
     return state
 
 
-def greedy(state: PartitionState) -> PartitionState:
+def greedy(state: PartitionState,
+           merge_log: Optional[List[Dict]] = None) -> PartitionState:
     """Fig. 6 via a lazy max-heap: pop the heaviest entry, skip it when
     stale (edge dropped, endpoint contracted away, or weight recomputed
     since the push), otherwise merge/drop exactly like the reference.
@@ -73,23 +100,30 @@ def greedy(state: PartitionState) -> PartitionState:
         if state.weights.get((u, v)) != -nw:
             continue                               # stale entry
         if state.legal_merge(u, v):
+            _log_merge(merge_log, state, "merged", u, v, -nw)
             state.merge(u, v)
             for x in state._adj[u]:
                 a, b = _ekey(u, x)
                 heapq.heappush(heap, (-state.weights[(a, b)], a, b))
         else:
+            _log_merge(merge_log, state, "rejected", u, v, -nw,
+                       reason=_reject_reason(state, u, v))
             state.drop_weight(u, v)
     return state
 
 
-def greedy_reference(state: PartitionState) -> PartitionState:
+def greedy_reference(state: PartitionState,
+                     merge_log: Optional[List[Dict]] = None) -> PartitionState:
     """Fig. 6, reference implementation: full O(E) rescan per contraction.
     Kept as the oracle for the heap variant's merge-sequence regression."""
     while state.weights:
         (u, v), w = max(state.weights.items(), key=lambda kv: (kv[1], -kv[0][0], -kv[0][1]))
         if state.legal_merge(u, v):
+            _log_merge(merge_log, state, "merged", u, v, w)
             state.merge(u, v)
         else:
+            _log_merge(merge_log, state, "rejected", u, v, w,
+                       reason=_reject_reason(state, u, v))
             state.drop_weight(u, v)
     return state
 
@@ -315,39 +349,54 @@ _ALGORITHMS = {
 _BUILDERS = {"indexed": build_graph, "reference": build_graph_reference}
 
 
+_LOGGING_ALGORITHMS = {"linear", "greedy", "greedy_reference"}
+
+
 def partition(ops: Sequence[Op], algorithm: str = "greedy",
               cost_model="bohrium", node_budget: int = 100_000,
               graph: Optional[WSPGraph] = None,
               builder: str = "indexed",
-              dense_weights: Optional[bool] = None) -> PartitionResult:
+              dense_weights: Optional[bool] = None,
+              merge_log: Optional[List[Dict]] = None) -> PartitionResult:
     """Front door: the graph + partition stages of the scheduler pipeline
     (tape → WSP graph → partition under a cost model).
 
     ``builder='reference'`` / ``dense_weights=True`` select the seed O(V²)
-    path — used by differential tests and the scaling benchmark oracle."""
+    path — used by differential tests and the scaling benchmark oracle.
+    ``merge_log`` (the obs/explain hook) collects one dict per merge the
+    WSP sweep considered — taken or rejected, with the priced saving — for
+    the algorithms that decide merge-by-merge (linear/greedy/
+    greedy_reference); other algorithms leave it empty."""
     if isinstance(cost_model, str):
         cost_model = make_cost_model(cost_model)
     if builder not in _BUILDERS:
         raise ValueError(f"unknown builder {builder!r}; have {sorted(_BUILDERS)}")
     t0 = time.perf_counter()
-    g = graph if graph is not None else _BUILDERS[builder](list(ops))
+    with trace.span("stage.graph", n_ops=len(ops), builder=builder):
+        g = graph if graph is not None else _BUILDERS[builder](list(ops))
     t_graph = time.perf_counter() - t0
     state = PartitionState(g, cost_model, dense=dense_weights)
     stats: Dict[str, float] = {}
     t1 = time.perf_counter()
-    if algorithm == "optimal":
-        state = optimal(state, node_budget=node_budget, stats=stats)
-        if stats.get("bb_exhausted_budget"):
-            # budget exhausted: the preconditioned incumbent may lose to a
-            # plain greedy sweep — never return worse than greedy.
-            alt = greedy(PartitionState(g, cost_model, dense=dense_weights))
-            if alt.cost() < state.cost():
-                state = alt
-                stats["fell_back_to_greedy"] = True
-    elif algorithm in _ALGORITHMS:
-        state = _ALGORITHMS[algorithm](state)
-    else:
-        raise ValueError(f"unknown algorithm {algorithm!r}; have {sorted(_ALGORITHMS)}")
+    with trace.span("stage.partition", algorithm=algorithm) as sp:
+        if algorithm == "optimal":
+            state = optimal(state, node_budget=node_budget, stats=stats)
+            if stats.get("bb_exhausted_budget"):
+                # budget exhausted: the preconditioned incumbent may lose to
+                # a plain greedy sweep — never return worse than greedy.
+                alt = greedy(PartitionState(g, cost_model,
+                                            dense=dense_weights))
+                if alt.cost() < state.cost():
+                    state = alt
+                    stats["fell_back_to_greedy"] = True
+        elif algorithm in _LOGGING_ALGORITHMS:
+            state = _ALGORITHMS[algorithm](state, merge_log=merge_log)
+        elif algorithm in _ALGORITHMS:
+            state = _ALGORITHMS[algorithm](state)
+        else:
+            raise ValueError(
+                f"unknown algorithm {algorithm!r}; have {sorted(_ALGORITHMS)}")
+        sp.set(n_blocks=state.n_blocks())
     stats["t_graph_s"] = t_graph
     stats["t_partition_s"] = time.perf_counter() - t1
     assert state.is_legal(), f"{algorithm} produced an illegal partition"

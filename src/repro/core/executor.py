@@ -20,6 +20,7 @@ signature)``, so iterative workloads (the paper's merge-cache scenario,
 from __future__ import annotations
 
 import time
+from collections.abc import Mapping
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -31,6 +32,8 @@ import numpy as np
 # callers historically import it from the executor.
 from .cache import block_signature                              # noqa: F401
 from .ir import COMM_OPS, Op, View
+from .obs import trace
+from .obs.metrics import MetricsRegistry, StatsView
 
 _UNARY = {
     "copy": lambda x: x, "sqrt": jnp.sqrt, "exp": jnp.exp, "log": jnp.log,
@@ -258,15 +261,22 @@ def make_block_fn(ops: Sequence[Op], seed: int = 0):
 
 
 
-def stats_delta(before: Dict, after: Dict) -> Dict:
+def stats_delta(before: Mapping, after: Mapping) -> Dict:
     """Recursive ``after - before`` over (possibly nested) numeric stat
-    dicts — the per-flush delta ``Runtime.flush`` records into history."""
+    mappings — the per-flush delta ``Runtime.flush`` records into history.
+
+    Accepts plain dicts and the live :class:`~repro.core.obs.metrics
+    .StatsView` alike, and always returns plain dicts.  Deltas are clamped
+    at zero: ``reset_stats()`` between the two observations (e.g. mid-way
+    through a deferred loop-fusion window) would otherwise make the next
+    drain's delta negative, which no consumer can interpret."""
     out: Dict = {}
     for k, v in after.items():
-        if isinstance(v, dict):
+        if isinstance(v, Mapping):
             out[k] = stats_delta(before.get(k, {}), v)
         else:
-            out[k] = v - before.get(k, 0)
+            d = v - before.get(k, 0)
+            out[k] = d if d > 0 else 0
     return out
 
 
@@ -323,40 +333,52 @@ class BlockExecutor:
         self._decisions: Dict[Tuple, object] = {}
         self._empty_salts = None
         self.sync_store: Dict[int, jnp.ndarray] = {}
-        self.stats = self._fresh_stats()
+        #: the single backing store for every executor observation
+        #: (DESIGN.md §17); ``stats`` is a legacy-dict-shaped live view
+        self.metrics = MetricsRegistry()
+        self.stats: StatsView = StatsView(self.metrics, prefix="executor")
+        self.reset_stats()
 
     # -- stats ---------------------------------------------------------
-    def _fresh_stats(self) -> Dict:
-        """Zeroed counters.  ``backend_blocks[name]`` counts dispatches per
-        backend; ``backend_fallbacks[name][reason]`` counts, per backend
-        the policy preferred over the one that ran, why it declined.  The
-        legacy ``pallas_*`` aliases keep their historical meaning: every
+    def reset_stats(self) -> None:
+        """Zero every counter (compiled executables and cached lowering
+        decisions are kept — resetting is observation, not state).
+
+        Declares the legacy stat shape onto the metrics registry:
+        ``backend_blocks[name]`` counts dispatches per backend;
+        ``backend_fallbacks[name][reason]`` counts, per backend the policy
+        preferred over the one that ran, why it declined.  The legacy
+        ``pallas_*`` aliases keep their historical meaning: every
         dispatched work block under a pallas-bearing policy lands either in
         ``pallas_blocks`` or in ``pallas_fallback_blocks`` with the reason
         slug counted in ``pallas_fallbacks`` (``codegen.REASONS``,
         DESIGN.md §13), so ``pallas_blocks / (pallas_blocks +
         pallas_fallback_blocks)`` is the executed kernel coverage."""
-        st: Dict = {"blocks_run": 0, "exec_cache_hits": 0,
-                    "exec_cache_misses": 0, "donated_buffers": 0,
-                    "pallas_blocks": 0, "pallas_fallback_blocks": 0,
-                    "pallas_fallbacks": {},
-                    "loop_flushes": 0, "loop_iterations": 0,
-                    "backend_blocks": {n: 0 for n in self.backends},
-                    "backend_fallbacks": {n: {} for n in self.backends}}
+        st = self.stats
+        for key in ("blocks_run", "exec_cache_hits", "exec_cache_misses",
+                    "donated_buffers", "pallas_blocks",
+                    "pallas_fallback_blocks"):
+            st.declare_scalar(key)
+        st.declare_group("pallas_fallbacks", ("reason",))
+        for key in ("loop_flushes", "loop_iterations"):
+            st.declare_scalar(key)
+        st.declare_group("backend_blocks", ("backend",),
+                         presets=self.backends)
+        st.declare_group("backend_fallbacks", ("backend", "reason"),
+                         presets=self.backends)
         if "shard_map" in self.backends:
-            st.update({"shard_map_blocks": 0, "collectives": 0,
-                       "interconnect_bytes": 0.0})
-        return st
-
-    def reset_stats(self) -> None:
-        """Zero every counter (compiled executables and cached lowering
-        decisions are kept — resetting is observation, not state)."""
-        self.stats = self._fresh_stats()
+            st.declare_scalar("shard_map_blocks")
+            st.declare_scalar("collectives")
+            st.declare_scalar("interconnect_bytes", 0.0)
+        else:
+            for key in ("shard_map_blocks", "collectives",
+                        "interconnect_bytes"):
+                st.drop(key)
 
     def snapshot_stats(self) -> Dict:
-        """Deep copy of the counters, for before/after flush deltas."""
-        import copy
-        return copy.deepcopy(self.stats)
+        """Plain nested-dict copy of the counters, for before/after flush
+        deltas (``stats_delta``)."""
+        return self.stats.to_dict()
 
     # -- policy --------------------------------------------------------
     def donation_enabled(self) -> bool:
@@ -440,24 +462,29 @@ class BlockExecutor:
         cached = self._cache.get(key)
         if cached is not None:
             self.stats["exec_cache_hits"] += 1
+            trace.instant("cache.exec", hit=True, backend=decision.backend)
             return (*cached, True)
         self.stats["exec_cache_misses"] += 1
-        be = get_backend(decision.backend)
-        try:
-            fn = be.build(ops, plan, ctx)
-        except Exception:
-            if decision.backend == "xla":
-                raise           # the floor backend must not fail silently
-            # builder bug: degrade to the XLA floor, not a crash
-            decision = LoweringDecision(
-                backend="xla",
-                declined=decision.declined + ((decision.backend, "error"),))
-            be = get_backend("xla")
-            fn = be.build(ops, plan, ctx)
-        donate = (plan.donatable if self.jit and be.donates
-                  and self.donation_enabled() else ())
-        if self.jit:
-            fn = jax.jit(fn, donate_argnums=donate)
+        trace.instant("cache.exec", hit=False, backend=decision.backend)
+        with trace.span("build", backend=decision.backend,
+                        n_ops=len(ops)):
+            be = get_backend(decision.backend)
+            try:
+                fn = be.build(ops, plan, ctx)
+            except Exception:
+                if decision.backend == "xla":
+                    raise       # the floor backend must not fail silently
+                # builder bug: degrade to the XLA floor, not a crash
+                decision = LoweringDecision(
+                    backend="xla",
+                    declined=decision.declined
+                    + ((decision.backend, "error"),))
+                be = get_backend("xla")
+                fn = be.build(ops, plan, ctx)
+            donate = (plan.donatable if self.jit and be.donates
+                      and self.donation_enabled() else ())
+            if self.jit:
+                fn = jax.jit(fn, donate_argnums=donate)
         entry = (fn, bool(donate), decision)
         self._cache[key] = entry
         return (*entry, False)
@@ -500,47 +527,54 @@ class BlockExecutor:
         ctx = self.lowering_context()
         if self._empty_salts is None:
             self._empty_salts = jnp.zeros((0,), dtype=jnp.int32)
-        for plan in schedule.blocks:
-            ops = [tape[i] for i in plan.op_indices]
-            if plan.has_work:
-                decision = getattr(plan, "lowering", None)
-                if decision is None:
-                    decision = self._decide(ops, plan, ctx)
-                # plan inputs/outputs are uid lists of THIS flush; the
-                # canonical signature guarantees positional correspondence
-                # with the cached executable across flushes.
-                fn, donates, decision, warm = self._executable(
-                    decision, ops, plan, ctx)
-                self._account(decision, plan, donates)
-                in_bufs = []
-                for u in plan.inputs:
-                    if u not in buffers:
-                        raise RuntimeError(f"base {u} read before definition")
-                    in_bufs.append(buffers[u])
-                salt_list = [getattr(op, "salt", op.uid) % (2**31 - 1)
-                             for op in ops
-                             if not op.is_system() and op.opcode == "random"]
-                salts = (jnp.asarray(salt_list, dtype=jnp.int32)
-                         if salt_list else self._empty_salts)
-                timing = warm and self.profiler is not None
-                if timing:
-                    jax.block_until_ready(in_bufs)   # drain queued work so
-                    t0 = time.perf_counter()         # the clock sees only
-                out_bufs = fn(*in_bufs, salts)       # THIS block
-                if timing:
-                    jax.block_until_ready(out_bufs)
-                    self.profiler.record(decision.backend, ops, plan, ctx,
-                                         time.perf_counter() - t0)
-                for u, b in zip(plan.outputs, out_bufs):
-                    buffers[u] = b
-                get_backend(decision.backend).post_dispatch(
-                    ops, plan, ctx, self.stats)
-            for op in ops:   # SYNC snapshots before DEL frees (Bohrium order)
-                for b in op.sync_bases:
-                    if b.uid in buffers:
-                        self.sync_store[b.uid] = buffers[b.uid]
-                for b in op.del_bases:
-                    buffers.pop(b.uid, None)
+        with trace.span("stage.execute", n_blocks=len(schedule.blocks)):
+            for plan in schedule.blocks:
+                ops = [tape[i] for i in plan.op_indices]
+                if plan.has_work:
+                    decision = getattr(plan, "lowering", None)
+                    if decision is None:
+                        decision = self._decide(ops, plan, ctx)
+                    # plan inputs/outputs are uid lists of THIS flush; the
+                    # canonical signature guarantees positional
+                    # correspondence with the cached executable across
+                    # flushes.
+                    fn, donates, decision, warm = self._executable(
+                        decision, ops, plan, ctx)
+                    self._account(decision, plan, donates)
+                    in_bufs = []
+                    for u in plan.inputs:
+                        if u not in buffers:
+                            raise RuntimeError(
+                                f"base {u} read before definition")
+                        in_bufs.append(buffers[u])
+                    salt_list = [getattr(op, "salt", op.uid) % (2**31 - 1)
+                                 for op in ops
+                                 if not op.is_system()
+                                 and op.opcode == "random"]
+                    salts = (jnp.asarray(salt_list, dtype=jnp.int32)
+                             if salt_list else self._empty_salts)
+                    timing = warm and self.profiler is not None
+                    with trace.span("block", backend=decision.backend,
+                                    n_ops=len(plan.op_indices)):
+                        if timing:
+                            jax.block_until_ready(in_bufs)  # drain queued
+                            t0 = time.perf_counter()   # work so the clock
+                        out_bufs = fn(*in_bufs, salts)  # sees ONE block
+                        if timing:
+                            jax.block_until_ready(out_bufs)
+                            self.profiler.record(decision.backend, ops, plan,
+                                                 ctx,
+                                                 time.perf_counter() - t0)
+                    for u, b in zip(plan.outputs, out_bufs):
+                        buffers[u] = b
+                    get_backend(decision.backend).post_dispatch(
+                        ops, plan, ctx, self.stats)
+                for op in ops:  # SYNC snapshots before DEL (Bohrium order)
+                    for b in op.sync_bases:
+                        if b.uid in buffers:
+                            self.sync_store[b.uid] = buffers[b.uid]
+                    for b in op.del_bases:
+                        buffers.pop(b.uid, None)
 
     def run_loop(self, loop_plan, state: Sequence, invariants: Sequence,
                  salts, n: int) -> Tuple:
@@ -567,23 +601,29 @@ class BlockExecutor:
             synced = {id(b) for b in self.sync_store.values()}
             donate = not any(id(b) in synced for b in state)
         key = ("loop", loop_plan.key, int(salts.shape[0]), donate)
-        cached = self._cache.get(key)
-        if cached is not None:
-            self.stats["exec_cache_hits"] += 1
-            fn = cached[0]
-        else:
-            self.stats["exec_cache_misses"] += 1
-            from .backends.loop_body import build_loop_fn
-            fn = build_loop_fn(loop_plan.tape, loop_plan.plans,
-                               loop_plan.input_sources,
-                               loop_plan.tape_inputs,
-                               loop_plan.tape_outputs, ctx)
-            if self.jit:
-                fn = jax.jit(fn, donate_argnums=(3,) if donate else ())
-            self._cache[key] = (fn,)
-        self.stats["loop_flushes"] += 1
-        self.stats["loop_iterations"] += int(n)
-        if donate:
-            self.stats["donated_buffers"] += len(state)
-        return tuple(fn(jnp.int32(n), salts, tuple(invariants),
-                        tuple(state)))
+        with trace.span("stage.execute", loop=True, n_iterations=int(n)):
+            cached = self._cache.get(key)
+            if cached is not None:
+                self.stats["exec_cache_hits"] += 1
+                trace.instant("cache.exec", hit=True, loop=True)
+                fn = cached[0]
+            else:
+                self.stats["exec_cache_misses"] += 1
+                trace.instant("cache.exec", hit=False, loop=True)
+                with trace.span("build", loop=True,
+                                n_ops=len(loop_plan.tape)):
+                    from .backends.loop_body import build_loop_fn
+                    fn = build_loop_fn(loop_plan.tape, loop_plan.plans,
+                                       loop_plan.input_sources,
+                                       loop_plan.tape_inputs,
+                                       loop_plan.tape_outputs, ctx)
+                    if self.jit:
+                        fn = jax.jit(fn,
+                                     donate_argnums=(3,) if donate else ())
+                self._cache[key] = (fn,)
+            self.stats["loop_flushes"] += 1
+            self.stats["loop_iterations"] += int(n)
+            if donate:
+                self.stats["donated_buffers"] += len(state)
+            return tuple(fn(jnp.int32(n), salts, tuple(invariants),
+                            tuple(state)))

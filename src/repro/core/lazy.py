@@ -31,6 +31,7 @@ from .dist import insert_resharding, tape_has_sharding
 from .dist.spec import sharding_ever_used
 from .executor import BlockExecutor
 from .ir import BaseArray, Op, View
+from .obs import trace
 from .scheduler import Scheduler
 
 Scalar = Union[int, float, bool]
@@ -120,12 +121,20 @@ class Runtime:
         #: program's op recording; benchmarks read deltas of this
         self.flush_wall_s = 0.0
         self.last_partition: Optional[PartitionResult] = None
+        #: the last tape handed to the scheduler (post-resharding) — what
+        #: ``repro.core.obs.explain`` replays to reconstruct the decisions
+        self.last_tape: Optional[List[Op]] = None
+        self._t_trace0: Optional[int] = None   # first record() of this tape
         #: per-flush records: planning stats plus an ``"exec"`` dict of
         #: per-flush executor stat deltas (NOT cumulative totals)
         self.history: "deque[Dict]" = deque(maxlen=history_limit)
 
     # -- recording -----------------------------------------------------
     def record(self, op: Op) -> None:
+        if not self.tape:
+            # stage 1 (trace) starts here; flush() emits the retroactive
+            # ``stage.trace`` span from this timestamp
+            self._t_trace0 = time.perf_counter_ns()
         # a base is pre-existing if it's on this tape already, in the buffer
         # store, or live in the deferred loop-fusion queue (DESIGN.md §16:
         # deferred outputs haven't materialized yet but logically exist)
@@ -180,53 +189,77 @@ class Runtime:
                 self._flushing = True
                 t0 = time.perf_counter()
                 try:
-                    fus.drain(self)
+                    with trace.context(flush=self.flushes), \
+                         trace.span("flush", n_ops=0, drain=True):
+                        fus.drain(self)
                 finally:
                     self._flushing = False
-                    self.flush_wall_s += time.perf_counter() - t0
+                    dt = time.perf_counter() - t0
+                    self.flush_wall_s += dt
+                    self.executor.metrics.histogram(
+                        "runtime.flush_wall_s").observe(dt)
             return
         self._flushing = True
         t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns()
         try:
             tape, self.tape = self.tape, []
-            if sharding_ever_used() and tape_has_sharding(tape):
-                # placement disagreements become explicit COMM graph nodes
-                # BEFORE partitioning, so WSP prices interconnect traffic
-                tape = insert_resharding(tape)
-            h0, m0 = self.cache.hits, self.cache.misses
-            if fus is not None and fus.fuse(self, tape):
+            with trace.context(flush=self.flushes), \
+                 trace.span("flush", n_ops=len(tape)) as fsp:
+                tr = trace.active()
+                if tr is not None and self._t_trace0 is not None:
+                    # stage 1 ran while the user program recorded ops; emit
+                    # it retroactively from the first record() timestamp
+                    tr.complete("stage.trace", self._t_trace0, t0_ns,
+                                {"n_ops": len(tape), "flush": self.flushes})
+                self._t_trace0 = None
+                if sharding_ever_used() and tape_has_sharding(tape):
+                    # placement disagreements become explicit COMM graph
+                    # nodes BEFORE partitioning, so WSP prices interconnect
+                    # traffic
+                    tape = insert_resharding(tape)
+                h0, m0 = self.cache.hits, self.cache.misses
+                if fus is not None and fus.fuse(self, tape):
+                    fsp.set(deferred=True)
+                    self._known = set()
+                    self.flushes += 1
+                    return
+                self.last_tape = tape
+                topo_fn = getattr(self.executor, "topology_key", None)
+                sched = self.scheduler.plan(
+                    tape, algorithm=self.algorithm,
+                    cost_model=self.cost_model,
+                    node_budget=self.node_budget,
+                    use_cache=self.use_cache,
+                    topology=topo_fn() if topo_fn else (),
+                    lowering=self.executor.lowering_policy())
+                if sched.result is not None:
+                    self.last_partition = sched.result
+                    entry = {"cost": sched.result.cost, "n_ops": len(tape),
+                             "n_blocks": sched.result.n_blocks,
+                             "cached": False, **sched.stats}
+                else:
+                    entry = {"n_ops": len(tape), "cached": True,
+                             **sched.stats}
+                entry["merge_hits"] = self.cache.hits - h0
+                entry["merge_misses"] = self.cache.misses - m0
+                fsp.set(n_blocks=len(sched.blocks),
+                        cached=entry.get("cached", False))
+                before = self.executor.snapshot_stats()
+                self.executor.run_schedule(sched, self.buffers)
+                from .executor import stats_delta
+                entry["exec"] = stats_delta(before, self.executor.stats)
+                if fus is not None:
+                    fus.mark_executed()
+                self.history.append(entry)
                 self._known = set()
                 self.flushes += 1
-                return
-            topo_fn = getattr(self.executor, "topology_key", None)
-            sched = self.scheduler.plan(
-                tape, algorithm=self.algorithm,
-                cost_model=self.cost_model,
-                node_budget=self.node_budget,
-                use_cache=self.use_cache,
-                topology=topo_fn() if topo_fn else (),
-                lowering=self.executor.lowering_policy())
-            if sched.result is not None:
-                self.last_partition = sched.result
-                entry = {"cost": sched.result.cost, "n_ops": len(tape),
-                         "n_blocks": sched.result.n_blocks,
-                         "cached": False, **sched.stats}
-            else:
-                entry = {"n_ops": len(tape), "cached": True, **sched.stats}
-            entry["merge_hits"] = self.cache.hits - h0
-            entry["merge_misses"] = self.cache.misses - m0
-            before = self.executor.snapshot_stats()
-            self.executor.run_schedule(sched, self.buffers)
-            from .executor import stats_delta
-            entry["exec"] = stats_delta(before, self.executor.stats)
-            if fus is not None:
-                fus.mark_executed()
-            self.history.append(entry)
-            self._known = set()
-            self.flushes += 1
         finally:
             self._flushing = False
-            self.flush_wall_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.flush_wall_s += dt
+            self.executor.metrics.histogram(
+                "runtime.flush_wall_s").observe(dt)
 
     def materialize(self, view: View) -> np.ndarray:
         self.record(Op("sync", None, sync_bases=frozenset({view.base})))

@@ -36,10 +36,12 @@ mode).
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 from .cache import (TapeMatcher, carried_state_mapping, tape_io,
                     tapes_structurally_equal)
+from .obs import trace
 
 _SALT_MOD = 2 ** 31 - 1       # matches BlockExecutor.run_schedule's salts
 
@@ -75,6 +77,16 @@ class LoopFuser:
         #: structure (steady-state fast path) + tape positions of random ops
         self._matcher: Optional[TapeMatcher] = None
         self._salt_pos: Tuple[int, ...] = ()
+        #: state-machine event log (obs/explain reads it); each entry is a
+        #: dict with at least an ``"event"`` key — arm/defer/drain/break
+        self.events: Deque[Dict] = deque(maxlen=256)
+        self._arm_seq = 0            # async trace id for deferred windows
+
+    def _event(self, event: str, **kv) -> None:
+        """Record a state-machine transition: kept in :attr:`events` for
+        explain reports AND mirrored as a trace instant when tracing."""
+        self.events.append({"event": event, **kv})
+        trace.instant(f"loop.{event}", **kv)
 
     # -- the flush handshake -------------------------------------------
     def fuse(self, rt, tape) -> bool:
@@ -87,9 +99,14 @@ class LoopFuser:
         # Once armed, the tape-side conditions (no SYNC, has work, outputs)
         # are structural facts the matcher re-certified — only the session
         # conditions need rechecking per flush.
-        ok = (self._session_ok(rt) if armed and self.loop_plan is not None
-              else self._deferrable(rt, tape))
-        if not (matched and self.streak >= self.threshold and ok):
+        reason = (self._session_block_reason(rt)
+                  if armed and self.loop_plan is not None
+                  else self._defer_block_reason(rt, tape))
+        if not (matched and self.streak >= self.threshold and reason is None):
+            if matched and self.streak >= self.threshold:
+                # the recurrence held but this flush can't defer — a
+                # session/tape condition, not a structure break
+                self._event("break", reason=reason, streak=self.streak)
             if self.pending:
                 self.drain(rt)
             return False
@@ -132,6 +149,9 @@ class LoopFuser:
                 self.streak += 1
                 self._last_tape, self._last_io = tape, io
                 return True
+        if self.streak > 0 or self.pending:
+            self._event("break", reason="structure-change",
+                        streak=self.streak)
         if self.pending:
             self.drain(rt)
         self.streak = 0
@@ -164,38 +184,55 @@ class LoopFuser:
                     return False
         return True
 
-    def _session_ok(self, rt) -> bool:
-        """Per-flush session conditions: a profiler needs per-block
-        timings; a mesh routes through shard_map collectives (out of scope
-        for the loop body); ``use_cache=False`` disables plan reuse
-        entirely.  And the loop state must actually exist: the previous
-        flush's outputs must be live buffers (or queued — then drain
-        seeding happens against ``exec_outs`` which ARE buffers)."""
+    def _session_block_reason(self, rt) -> Optional[str]:
+        """Per-flush session conditions — None when deferral is allowed,
+        else a reason slug (the obs layer records it on break events).  A
+        profiler needs per-block timings; a mesh routes through shard_map
+        collectives (out of scope for the loop body); ``use_cache=False``
+        disables plan reuse entirely.  And the loop state must actually
+        exist: the previous flush's outputs must be live buffers (or queued
+        — then drain seeding happens against ``exec_outs`` which ARE
+        buffers)."""
         ex = rt.executor
-        if not rt.use_cache or ex.profiler is not None or ex.mesh is not None:
-            return False
+        if not rt.use_cache:
+            return "cache-disabled"
+        if ex.profiler is not None:
+            return "profiler-active"
+        if ex.mesh is not None:
+            return "mesh-active"
         outs = self.exec_outs
         if outs is None:
-            return False
+            return "no-executed-state"
         bufs = rt.buffers
         for u in outs:
             if u not in bufs:
-                return False
-        return True
+                return "state-not-resident"
+        return None
 
-    def _deferrable(self, rt, tape) -> bool:
-        """:meth:`_session_ok` plus the tape-side conditions: SYNC ops
-        materialize state (the host observes it now), and the tape must do
-        work and produce outputs."""
-        if not self._session_ok(rt):
-            return False
+    def _session_ok(self, rt) -> bool:
+        return self._session_block_reason(rt) is None
+
+    def _defer_block_reason(self, rt, tape) -> Optional[str]:
+        """:meth:`_session_block_reason` plus the tape-side conditions:
+        SYNC ops materialize state (the host observes it now), and the tape
+        must do work and produce outputs."""
+        reason = self._session_block_reason(rt)
+        if reason is not None:
+            return reason
         has_work = False
         for op in tape:
             if op.sync_bases:
-                return False
+                return "sync-op"
             if not op.is_system():
                 has_work = True
-        return has_work and bool(self._last_io[1])
+        if not has_work:
+            return "no-work"
+        if not self._last_io[1]:
+            return "no-outputs"
+        return None
+
+    def _deferrable(self, rt, tape) -> bool:
+        return self._defer_block_reason(rt, tape) is None
 
     # -- loop planning --------------------------------------------------
     def _arm(self, rt, tape) -> None:
@@ -231,6 +268,9 @@ class LoopFuser:
         # generic tape_io exactly or the fast path stays off
         m = TapeMatcher(tape, self._last_io)
         self._matcher = m if m.match(tape) == self._last_io else None
+        self._event("arm", streak=self.streak, unroll=self.unroll,
+                    n_state=len(self._last_io[1]),
+                    fast_matcher=self._matcher is not None)
 
     # -- deferral & drain ----------------------------------------------
     def _defer(self, rt, tape) -> None:
@@ -241,7 +281,16 @@ class LoopFuser:
         sp = self._salt_pos
         row = tuple(tape[i].salt % _SALT_MOD for i in sp) if sp else ()
         ins, outs, dels = self._last_io
+        if not self.pending:
+            # a new deferred window opens: one async trace pair spans it
+            # from the first queued iteration to its drain
+            self._arm_seq += 1
+            tr = trace.active()
+            if tr is not None:
+                tr.async_begin("loop.deferred", f"loop-{self._arm_seq}")
         self.pending.append((row, dels, outs))
+        self._event("defer", pending=len(self.pending))
+        rt.executor.metrics.gauge("loop.pending").set(len(self.pending))
         if outs != self._live_key:   # only the LAST queued state is live
             self.live = set(outs)
             self._live_key = outs
@@ -271,6 +320,12 @@ class LoopFuser:
         lp = self.loop_plan
         pending, self.pending = self.pending, []
         n = len(pending)
+        self._event("drain", n_iterations=n)
+        rt.executor.metrics.gauge("loop.pending").set(0)
+        tr = trace.active()
+        if tr is not None:
+            tr.async_end("loop.deferred", f"loop-{self._arm_seq}",
+                         {"n_iterations": n})
         if self._salt_mat is None:
             self._salt_mat = np.zeros((self.unroll, self._n_rand),
                                       dtype=np.int32)

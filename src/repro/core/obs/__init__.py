@@ -1,0 +1,24 @@
+"""Observability subsystem (DESIGN.md §17): span tracing, a unified
+metrics registry and the fusion-decision explain layer.
+
+Three pillars, each importable on its own:
+
+* :mod:`repro.core.obs.trace`   — a span tracer with a near-zero disabled
+  fast path and a Chrome trace-event (Perfetto-loadable) JSON exporter.
+  Every pipeline stage (trace → graph → partition → schedule → lower →
+  execute), the cross-flush LoopFuser and the merge/executable caches emit
+  into it when a tracer is enabled.
+* :mod:`repro.core.obs.metrics` — counters, gauges and histograms with
+  labels; the single backing store behind ``BlockExecutor.stats`` (the
+  legacy dict shape is a thin :class:`~repro.core.obs.metrics.StatsView`).
+* :mod:`repro.core.obs.explain` — for one flush, the priced story of every
+  fusion decision: merges taken vs rejected, per-backend lowering verdicts,
+  cache provenance and the loop-fuser state machine (text + JSON).
+"""
+
+from . import trace
+from .explain import ExplainReport, explain
+from .metrics import MetricsRegistry, StatsView
+
+__all__ = ["trace", "explain", "ExplainReport", "MetricsRegistry",
+           "StatsView"]

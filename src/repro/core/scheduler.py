@@ -51,6 +51,7 @@ from .cache import MergeCache, tape_signature
 from .cost import make_cost_model, model_cache_token
 from .executor import block_dead_bases, block_io, block_signature
 from .ir import Op
+from .obs import trace
 
 
 @dataclass(frozen=True)
@@ -183,6 +184,7 @@ class Scheduler:
                                  backends=lowering.key() if lowering else (),
                                  cost_token=model_cache_token(cost_model))
             entry = self.cache.get(key)
+            trace.instant("cache.merge", hit=entry is not None)
             if entry is not None:
                 blocks, decisions = entry
                 cached = True
@@ -194,15 +196,18 @@ class Scheduler:
             blocks = tuple(tuple(b) for b in result.op_blocks())
             stats.update(result.stats)
         t0 = time.perf_counter()
-        plans = plan_blocks(tape, blocks)
+        with trace.span("stage.schedule", n_blocks=len(blocks),
+                        cached=cached):
+            plans = plan_blocks(tape, blocks)
         stats["t_schedule_s"] = time.perf_counter() - t0
         if lowering is not None:
             t0 = time.perf_counter()
-            if decisions is None:
-                decisions = lower_plans(tape, plans, lowering,
-                                        make_cost_model(cost_model))
-            plans = [replace(p, lowering=d) if d is not None else p
-                     for p, d in zip(plans, decisions)]
+            with trace.span("stage.lower", cached=decisions is not None):
+                if decisions is None:
+                    decisions = lower_plans(tape, plans, lowering,
+                                            make_cost_model(cost_model))
+                plans = [replace(p, lowering=d) if d is not None else p
+                         for p, d in zip(plans, decisions)]
             stats["t_lower_s"] = time.perf_counter() - t0
         if use_cache and not cached:
             self.cache.put(key, (blocks, decisions))

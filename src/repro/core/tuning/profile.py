@@ -160,7 +160,7 @@ class Profiler:
         if backend == "shard_map":
             from ..dist.reshard import block_comm_bytes
             fabric = block_comm_bytes(ops)
-        self.profile.record(ProfileSample(
+        sample = ProfileSample(
             backend=backend,
             sig=signature_digest(plan.signature),
             wall_s=float(wall_s),
@@ -168,4 +168,8 @@ class Profiler:
             hbm_bytes=float(info.ext_size("bytes")),
             fabric_bytes=float(fabric),
             n_ops=len(work),
-        ))
+        )
+        self.profile.record(sample)
+        from ..obs import trace
+        trace.instant("profiler.sample", backend=backend,
+                      wall_s=sample.wall_s, sig=sample.sig)

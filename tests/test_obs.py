@@ -1,0 +1,482 @@
+"""Observability subsystem tests (DESIGN.md §17): the span tracer and its
+Chrome export, the metrics registry + legacy StatsView facade, per-flush
+stat deltas (including the reset-mid-defer clamp regression), trace-id
+propagation across loop-fused drains, and the explain report."""
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import lazy as bh
+from repro.core.executor import stats_delta
+from repro.core.lazy import fresh_runtime
+from repro.core.obs import ExplainReport, MetricsRegistry, explain, trace
+from repro.core.obs.metrics import StatsView
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:                  # for tools.check_trace
+    sys.path.insert(0, _ROOT)
+
+
+@pytest.fixture
+def tracer():
+    """Install a fresh tracer for the test, always uninstalling after."""
+    tr = trace.enable()
+    try:
+        yield tr
+    finally:
+        trace.disable()
+
+
+def _chain(rt, n=32):
+    x = bh.asarray(np.linspace(0.0, 1.0, n))
+    y = (bh.sin(x) * 0.5 + x * 0.25) * 2.0
+    return float(y.sum().numpy())
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_disabled_span_is_shared_noop_singleton(self):
+        assert trace.active() is None
+        s1 = trace.span("a", k=1)
+        s2 = trace.span("b")
+        assert s1 is s2                    # no allocation on the fast path
+        with s1 as s:
+            s.set(x=1)                     # all no-ops
+        trace.instant("nothing")           # no-op, no error
+
+    def test_disabled_overhead_is_small(self):
+        ns = trace.disabled_span_overhead_ns(iterations=20_000, repeats=3)
+        assert 0.0 <= ns < 1000.0          # CI sanity; bench gates at 100
+
+    def test_span_and_instant_record_chrome_events(self, tracer):
+        with trace.span("outer", a=1) as sp:
+            sp.set(b=2)
+            trace.instant("tick", n=3)
+        assert [e["name"] for e in tracer.events] == ["tick", "outer"]
+        tick, outer = tracer.events
+        assert tick["ph"] == "i" and tick["s"] == "t"
+        assert tick["args"] == {"n": 3}
+        assert outer["ph"] == "X" and outer["dur"] >= 0
+        assert outer["args"] == {"a": 1, "b": 2}
+        for ev in tracer.events:
+            for fld in ("name", "ph", "ts", "pid", "tid"):
+                assert fld in ev
+
+    def test_context_overlay_merges_and_restores(self, tracer):
+        with trace.context(flush=7):
+            trace.instant("inner")
+            with trace.context(flush=8, extra="x"):
+                trace.instant("nested")
+        trace.instant("outside")
+        by_name = {e["name"]: e["args"] for e in tracer.events}
+        assert by_name["inner"] == {"flush": 7}
+        assert by_name["nested"] == {"flush": 8, "extra": "x"}
+        assert by_name["outside"] == {}
+
+    def test_async_pair(self, tracer):
+        tracer.async_begin("win", "id-1")
+        tracer.async_end("win", "id-1", {"n": 4})
+        b, e = tracer.events
+        assert (b["ph"], e["ph"]) == ("b", "e")
+        assert b["id"] == e["id"] == "id-1"
+
+    def test_max_events_stops_recording(self):
+        tr = trace.Tracer(max_events=2)
+        for i in range(5):
+            tr.instant(f"e{i}")
+        assert len(tr.events) == 2 and tr.dropped == 3
+        assert tr.to_chrome()["otherData"]["dropped_events"] == 3
+
+    def test_traced_decorator(self, tracer):
+        @trace.traced("labelled")
+        def f(a, b=1):
+            return a + b
+
+        assert f(2, b=3) == 5
+        assert tracer.events[-1]["name"] == "labelled"
+
+    def test_export_chrome_roundtrip(self, tracer, tmp_path):
+        trace.instant("x")
+        path = str(tmp_path / "t.json")
+        tracer.export_chrome(path)
+        doc = json.loads(open(path).read())
+        assert doc["traceEvents"][0]["name"] == "x"
+        assert doc["displayTimeUnit"] == "ms"
+
+    def test_enable_returns_installed_disable_returns_it(self):
+        tr = trace.enable()
+        try:
+            assert trace.active() is tr
+        finally:
+            assert trace.disable() is tr
+        assert trace.active() is None
+
+
+# ---------------------------------------------------------------------------
+# pipeline instrumentation
+# ---------------------------------------------------------------------------
+
+STAGES = ("stage.trace", "stage.graph", "stage.partition",
+          "stage.schedule", "stage.lower", "stage.execute")
+
+
+class TestPipelineSpans:
+    def test_single_flush_emits_all_six_stages(self, tracer):
+        with fresh_runtime(algorithm="greedy") as rt:
+            _chain(rt)
+        names = {e["name"] for e in tracer.events}
+        for stage in STAGES:
+            assert stage in names, f"missing {stage}"
+        assert "flush" in names and "block" in names and "build" in names
+        assert "cache.merge" in names and "cache.exec" in names
+
+    def test_events_validate_against_chrome_schema(self, tracer):
+        from tools.check_trace import check_events
+        with fresh_runtime(algorithm="greedy") as rt:
+            _chain(rt)
+        assert check_events(tracer.events) == []
+
+    def test_flush_ids_distinct_per_flush(self, tracer):
+        with fresh_runtime(algorithm="greedy", loop_fusion=False) as rt:
+            _chain(rt)
+            _chain(rt)
+        ids = {e["args"]["flush"] for e in tracer.events
+               if e["name"] == "flush"}
+        assert len(ids) >= 2
+
+    def test_trace_id_propagates_into_loop_drain(self, tracer):
+        """A drain triggered by a LATER flush (here: the empty sync flush)
+        inherits that flush's trace id on every event it emits."""
+        with fresh_runtime(algorithm="greedy", loop_threshold=2,
+                           loop_unroll=16) as rt:
+            x = bh.asarray(np.linspace(0.0, 1.0, 32))
+            bh.flush()
+            for _ in range(6):
+                y = x * 0.99 + bh.sin(x) * 0.01
+                x.delete()
+                x = y
+                bh.flush()
+            final = float(x.sum().numpy())    # drains the queue
+        assert np.isfinite(final)
+        drains = [e for e in tracer.events if e["name"] == "loop.drain"]
+        assert drains, "loop fusion never drained"
+        drain_fid = drains[-1]["args"]["flush"]
+        loop_execs = [e for e in tracer.events
+                      if e["name"] == "stage.execute"
+                      and e["args"].get("loop")]
+        assert loop_execs and loop_execs[-1]["args"]["flush"] == drain_fid
+        defer_fids = {e["args"]["flush"] for e in tracer.events
+                      if e["name"] == "loop.defer"}
+        assert drain_fid not in defer_fids   # the drain is a later flush
+
+    def test_loop_async_window_brackets_defers(self, tracer):
+        with fresh_runtime(algorithm="greedy", loop_threshold=2,
+                           loop_unroll=16) as rt:
+            x = bh.asarray(np.linspace(0.0, 1.0, 32))
+            bh.flush()
+            for _ in range(5):
+                y = x * 0.5 + 0.1
+                x.delete()
+                x = y
+                bh.flush()
+            float(x.sum().numpy())
+        phases = [e["ph"] for e in tracer.events
+                  if e["name"] == "loop.deferred"]
+        assert phases == ["b", "e"]
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+class TestMetricsRegistry:
+    def test_counter_labels_and_get_or_create(self):
+        reg = MetricsRegistry()
+        c = reg.counter("x.total", ("kind",))
+        c.inc(labels=("a",))
+        c.inc(2, labels=("a",))
+        assert c.get(("a",)) == 3 and c.get(("b",)) == 0
+        assert reg.counter("x.total", ("kind",)) is c
+
+    def test_kind_and_label_conflicts_raise(self):
+        reg = MetricsRegistry()
+        reg.counter("m")
+        with pytest.raises(TypeError):
+            reg.gauge("m")
+        with pytest.raises(ValueError):
+            reg.counter("m", ("unexpected",))
+
+    def test_gauge_moves_both_ways(self):
+        g = MetricsRegistry().gauge("q.depth")
+        g.inc(5)
+        g.dec(2)
+        assert g.get() == 3
+
+    def test_histogram_summary(self):
+        h = MetricsRegistry().histogram("t.wall_s")
+        for v in (0.005, 0.02, 0.02):
+            h.observe(v)
+        s = h.summary()
+        assert s["count"] == 3
+        assert s["min"] == pytest.approx(0.005)
+        assert s["max"] == pytest.approx(0.02)
+        assert sum(s["buckets"].values()) == 3
+
+    def test_snapshot_is_json_serializable(self):
+        reg = MetricsRegistry()
+        reg.counter("a.b", ("l",)).inc(labels=("x",))
+        reg.histogram("a.h").observe(0.5)
+        json.dumps(reg.snapshot())
+
+
+class TestStatsView:
+    def make(self):
+        reg = MetricsRegistry()
+        st = StatsView(reg, prefix="t")
+        st.declare_scalar("n")
+        st.declare_group("per_backend", ("backend",),
+                         presets=("pallas", "xla"))
+        st.declare_group("fallbacks", ("backend", "reason"),
+                         presets=("pallas", "xla"))
+        return st
+
+    def test_legacy_idioms(self):
+        st = self.make()
+        st["n"] += 2                                    # scalar +=
+        st["per_backend"]["pallas"] = 5                 # leaf assign
+        bb = st["per_backend"]
+        bb["xla"] = bb.get("xla", 0) + 1                # get-or-zero inc
+        fr = st["fallbacks"].setdefault("pallas", {})   # nested setdefault
+        fr["opcode"] = fr.get("opcode", 0) + 1
+        assert dict(st)["n"] == 2
+        assert st["per_backend"] == {"pallas": 5, "xla": 1}
+        assert st["fallbacks"]["pallas"]["opcode"] == 1
+        assert st["fallbacks"]["xla"] == {}             # preset empty
+        assert st.to_dict() == {
+            "n": 2, "per_backend": {"pallas": 5, "xla": 1},
+            "fallbacks": {"pallas": {"opcode": 1}, "xla": {}}}
+
+    def test_declare_on_first_scalar_write(self):
+        st = self.make()
+        st["new_metric"] = 7
+        assert st["new_metric"] == 7 and "new_metric" in dict(st)
+
+    def test_group_wholesale_replace(self):
+        st = self.make()
+        st["per_backend"]["pallas"] = 3
+        st["per_backend"] = {"echo": 9}
+        assert st["per_backend"] == {"echo": 9}
+        st["fallbacks"] = {"echo": {"x": 1}}
+        assert st["fallbacks"] == {"echo": {"x": 1}}
+
+    def test_missing_key_raises(self):
+        st = self.make()
+        with pytest.raises(KeyError):
+            st["absent"]
+        with pytest.raises(KeyError):
+            st["per_backend"]["never_seen"]
+
+    def test_truthiness_of_empty_group(self):
+        st = self.make()
+        assert not st["fallbacks"]["pallas"]            # legacy `or "none"`
+        st["fallbacks"]["pallas"]["r"] = 1
+        assert st["fallbacks"]["pallas"]
+
+
+# ---------------------------------------------------------------------------
+# stats deltas
+# ---------------------------------------------------------------------------
+
+class TestStatsDelta:
+    def test_missing_keys_in_before(self):
+        before = {"a": 1, "g": {"xla": 1}}
+        after = {"a": 2, "b": 5, "g": {"xla": 2, "pallas": 3}}
+        assert stats_delta(before, after) == {
+            "a": 1, "b": 5, "g": {"xla": 1, "pallas": 3}}
+
+    def test_clamped_at_zero(self):
+        before = {"a": 5, "g": {"xla": {"r": 4}}}
+        after = {"a": 2, "g": {"xla": {"r": 1}}}
+        assert stats_delta(before, after) == {"a": 0, "g": {"xla": {"r": 0}}}
+
+    def test_new_backend_between_snapshots_live_views(self):
+        with fresh_runtime(algorithm="greedy") as rt:
+            before = rt.executor.snapshot_stats()
+            _chain(rt)
+            d = stats_delta(before, rt.executor.stats)
+        assert d["blocks_run"] >= 1
+        assert all(v >= 0 for v in d["backend_blocks"].values())
+        json.dumps(d)                       # plain dicts all the way down
+
+    def test_reset_mid_defer_deltas_stay_nonnegative(self):
+        """Regression (ISSUE 7 satellite): reset_stats() while iterations
+        sit in the deferred loop queue used to yield negative
+        loop_iterations deltas in the drain's history entry."""
+        with fresh_runtime(algorithm="greedy", loop_threshold=2,
+                           loop_unroll=4) as rt:
+            x = bh.asarray(np.linspace(0.0, 1.0, 32))
+            bh.flush()
+            for _ in range(9):              # several drains at unroll=4
+                y = x * 0.99 + bh.sin(x) * 0.01
+                x.delete()
+                x = y
+                bh.flush()
+            assert rt._loop.pending         # mid-defer right now
+            snap = rt.executor.snapshot_stats()
+            assert snap["loop_iterations"] > 0
+            rt.executor.reset_stats()
+            float(x.sum().numpy())          # drains the remaining queue
+            d = stats_delta(snap, rt.executor.stats)
+
+            def check(m):
+                for v in m.values():
+                    if isinstance(v, dict):
+                        check(v)
+                    else:
+                        assert v >= 0, (m, d)
+            check(d)
+            drain = [h for h in rt.history if h.get("loop_drain")][-1]
+            assert drain["exec"]["loop_iterations"] >= 0
+
+    def test_snapshot_survives_reset_shape_change(self):
+        with fresh_runtime(algorithm="greedy") as rt:
+            _chain(rt)
+            snap = rt.executor.snapshot_stats()
+            rt.executor.reset_stats()
+            assert rt.executor.stats["blocks_run"] == 0
+            _chain(rt)
+            d = stats_delta(snap, rt.executor.stats)
+            assert d["blocks_run"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# executor metrics backing
+# ---------------------------------------------------------------------------
+
+class TestExecutorMetrics:
+    def test_stats_is_registry_backed(self):
+        with fresh_runtime(algorithm="greedy") as rt:
+            _chain(rt)
+            ex = rt.executor
+            assert isinstance(ex.stats, StatsView)
+            c = ex.metrics.get("executor.blocks_run")
+            assert c is not None and c.get() == ex.stats["blocks_run"]
+            assert "executor.backend_blocks" in ex.metrics.names()
+
+    def test_flush_wall_histogram_observes(self):
+        with fresh_runtime(algorithm="greedy") as rt:
+            _chain(rt)
+            h = rt.executor.metrics.get("runtime.flush_wall_s")
+            assert h is not None and h.summary()["count"] >= 1
+
+    def test_history_exec_deltas_sum_to_live_stats(self):
+        with fresh_runtime(algorithm="greedy", loop_fusion=False) as rt:
+            _chain(rt)
+            _chain(rt)
+            total = sum(h["exec"]["blocks_run"] for h in rt.history
+                        if "exec" in h)
+            assert total == rt.executor.stats["blocks_run"]
+
+
+# ---------------------------------------------------------------------------
+# explain
+# ---------------------------------------------------------------------------
+
+def _decision_program(rt):
+    """Fusible chain + fuse-forbidden shifted write + pallas-opaque matmul:
+    one flush with merges taken, a priced rejected merge and a per-backend
+    decline."""
+    x = bh.asarray(np.linspace(0.0, 1.0, 256))
+    t = bh.sin(x) * 0.5 + x * 0.25
+    w = t * 2.0
+    x[1:] = w[:-1]
+    out = x + w          # reads x after the shifted write: merge rejected
+    a = bh.asarray(np.arange(64.0).reshape(8, 8))
+    mm = bh.matmul(a, a)
+    rt.flush()
+    return out, mm
+
+
+class TestExplain:
+    def test_requires_a_flush(self):
+        with fresh_runtime(algorithm="greedy") as rt:
+            with pytest.raises(ValueError):
+                explain(rt)
+
+    def test_report_contents(self):
+        with fresh_runtime(algorithm="greedy",
+                           backend=("pallas", "xla")) as rt:
+            _decision_program(rt)
+            rep = explain(rt)
+        assert isinstance(rep, ExplainReport)
+        assert rep.n_blocks == len(rep.blocks) > 0
+        assert rep.taken_merges(), "chain should merge"
+        rej = rep.rejected_merges()
+        assert rej and all(m.saving > 0 for m in rej)
+        assert all(m.reason in ("fuse-forbidden", "dependency-cycle")
+                   for m in rej)
+        # every work block carries a verdict per policy backend, and the
+        # matmul block shows pallas's decline reason
+        declined = []
+        for b in rep.blocks:
+            if b.backend is None:
+                continue
+            assert {v.backend for v in b.verdicts} == {"pallas", "xla"}
+            assert sum(v.winner for v in b.verdicts) == 1
+            declined += [v for v in b.verdicts if not v.claimed]
+        assert any(v.reason == "opcode" for v in declined)
+        assert rep.cache["resident"] is True
+
+    def test_replay_does_not_perturb_cache_counters(self):
+        with fresh_runtime(algorithm="greedy") as rt:
+            _decision_program(rt)
+            h0, m0 = rt.cache.hits, rt.cache.misses
+            explain(rt)
+            assert (rt.cache.hits, rt.cache.misses) == (h0, m0)
+
+    def test_json_and_text_render(self):
+        with fresh_runtime(algorithm="greedy") as rt:
+            _decision_program(rt)
+            rep = explain(rt)
+        doc = json.loads(rep.to_json())
+        assert doc["schema"] == "repro_explain_v1"
+        assert doc["merges"] and doc["blocks"]
+        text = rep.format_text()
+        assert "rejected" in text and "declined" not in text.split()[0]
+        assert "merge cache" in text
+
+    def test_loop_events_in_report(self):
+        with fresh_runtime(algorithm="greedy", loop_threshold=2,
+                           loop_unroll=8) as rt:
+            x = bh.asarray(np.linspace(0.0, 1.0, 32))
+            bh.flush()
+            for _ in range(5):
+                y = x * 0.5 + 0.1
+                x.delete()
+                x = y
+                bh.flush()
+            float(x.sum().numpy())
+            rep = explain(rt)
+        kinds = {e["event"] for e in rep.loop}
+        assert {"arm", "defer", "drain"} <= kinds
+
+    def test_explain_matches_executed_backends(self):
+        """The replayed winners agree with what actually ran."""
+        with fresh_runtime(algorithm="greedy",
+                           backend=("pallas", "xla")) as rt:
+            _decision_program(rt)
+            executed = dict(rt.executor.stats["backend_blocks"])
+            rep = explain(rt)
+        replayed: dict = {}
+        for b in rep.blocks:
+            if b.backend:
+                replayed[b.backend] = replayed.get(b.backend, 0) + 1
+        for name, n in replayed.items():
+            assert executed.get(name, 0) == n

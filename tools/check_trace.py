@@ -1,0 +1,114 @@
+"""CI gate: validate a Chrome trace-event JSON produced by
+``repro.core.obs.trace`` (DESIGN.md §17).
+
+Checks, in order:
+
+1. the file parses and has the ``{"traceEvents": [...]}`` envelope;
+2. every event is schema-valid for its phase — ``name``/``ph``/``ts``/
+   ``pid``/``tid`` always, ``dur`` on complete events (``X``), ``s`` on
+   instants (``i``), ``id`` on async begin/end (``b``/``e``) — so the file
+   loads in Perfetto / ``chrome://tracing``;
+3. all six pipeline stage spans are present (``stage.trace`` …
+   ``stage.execute``) — the instrumentation covers the whole pipeline;
+4. unless ``--no-loop``: the loop-fuser defer/drain instants are present —
+   the traced program exercised cross-flush loop fusion.
+
+Exit 0 when every check passes, 1 with a message otherwise.
+
+    python -m tools.check_trace trace.json
+    python -m tools.check_trace trace.json --no-loop
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+STAGE_SPANS = ("stage.trace", "stage.graph", "stage.partition",
+               "stage.schedule", "stage.lower", "stage.execute")
+LOOP_INSTANTS = ("loop.defer", "loop.drain")
+
+_PH_EXTRA = {"X": ("dur",), "i": ("s",), "b": ("id",), "e": ("id",)}
+_KNOWN_PH = set("XiIbensftPOCNDMBE")
+
+
+def check_events(events: List[Dict]) -> List[str]:
+    """Schema errors in ``events`` (empty list = valid)."""
+    errors: List[str] = []
+    for k, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {k}: not an object")
+            continue
+        for fld in ("name", "ph", "ts", "pid", "tid"):
+            if fld not in ev:
+                errors.append(f"event {k} ({ev.get('name', '?')}): "
+                              f"missing {fld!r}")
+        ph = ev.get("ph")
+        if ph not in _KNOWN_PH:
+            errors.append(f"event {k} ({ev.get('name', '?')}): "
+                          f"unknown phase {ph!r}")
+        for fld in _PH_EXTRA.get(ph, ()):
+            if fld not in ev:
+                errors.append(f"event {k} ({ev.get('name', '?')}): "
+                              f"phase {ph!r} requires {fld!r}")
+        if not isinstance(ev.get("ts"), (int, float)):
+            errors.append(f"event {k} ({ev.get('name', '?')}): "
+                          "ts is not a number")
+        if len(errors) >= 20:
+            errors.append("... (more errors suppressed)")
+            break
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.check_trace",
+        description="Validate a repro Chrome trace-event JSON file")
+    ap.add_argument("path", help="trace JSON file to validate")
+    ap.add_argument("--no-loop", action="store_true",
+                    help="skip the loop-fuser defer/drain instant check")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_trace: FAIL: cannot load {args.path}: {e}")
+        return 1
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        print("check_trace: FAIL: no traceEvents array (or empty)")
+        return 1
+
+    errors = check_events(events)
+    for e in errors:
+        print(f"check_trace: FAIL: {e}")
+    if errors:
+        return 1
+
+    names = {ev["name"] for ev in events}
+    missing = [n for n in STAGE_SPANS if n not in names]
+    if missing:
+        print(f"check_trace: FAIL: missing stage spans: {missing}")
+        return 1
+    if not args.no_loop:
+        missing = [n for n in LOOP_INSTANTS if n not in names]
+        if missing:
+            print(f"check_trace: FAIL: missing loop-fuser instants: "
+                  f"{missing} (pass --no-loop for non-loop traces)")
+            return 1
+
+    counts: Dict[str, int] = {}
+    for ev in events:
+        counts[ev["name"]] = counts.get(ev["name"], 0) + 1
+    top = sorted(counts.items(), key=lambda kv: -kv[1])[:8]
+    summary = ", ".join(f"{n}×{c}" for n, c in top)
+    print(f"check_trace: OK: {len(events)} events ({summary})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,80 @@
+"""Fusion-decision explain CLI (DESIGN.md §17).
+
+Runs a small demo program on the lazy runtime and prints the
+:mod:`repro.core.obs.explain` report for its flush: per-block composition,
+every merge the WSP partitioner took or rejected (with the priced saving),
+every backend's claim/decline verdict per block, cache provenance and the
+loop-fuser log.
+
+    python -m tools.explain                 # text report, demo program
+    python -m tools.explain --json          # machine-readable
+    python -m tools.explain --algorithm linear --backend pallas,xla
+
+The demo program is chosen to exercise the interesting decision paths: a
+fusible elementwise chain (merges taken), a shifted-view in-place update
+(a Def. 12 fuse-forbidden edge the partitioner must reject, priced) and a
+reduction. Pass ``--backend`` with more than one backend to see per-block
+decline reasons from the losing backends.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def demo_program(rt):
+    """Record + flush the demo tape; returns the runtime (flushed)."""
+    import numpy as np
+
+    from repro.core import lazy as bh
+
+    x = bh.asarray(np.linspace(0.0, 1.0, 1024))
+    y = bh.asarray(np.linspace(1.0, 2.0, 1024))
+    # fusible chain: these should merge into one block
+    z = x * 0.5 + bh.sin(y) * 0.25
+    w = z + x * y
+    # shifted in-place update: reads t[:-1] while writing x[1:] — Def. 12
+    # forbids fusing this with the producer, so the partitioner must
+    # reject a priced merge here
+    t = w * 2.0
+    x[1:] = t[:-1]
+    out = x + w
+    # a matmul block: opaque to the pallas codegen, so with the default
+    # pallas,xla preference the report shows a per-backend decline reason
+    a = bh.asarray(np.arange(64.0).reshape(8, 8))
+    mm = bh.matmul(a, a)
+    rt.flush()
+    return out, mm
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.explain",
+        description="Explain the runtime's fusion/lowering decisions")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable report")
+    ap.add_argument("--algorithm", default="greedy",
+                    help="WSP algorithm (default: greedy)")
+    ap.add_argument("--cost-model", default="bohrium",
+                    help="cost model (default: bohrium)")
+    ap.add_argument("--backend", default="pallas,xla",
+                    help="comma-separated lowering backend preference "
+                         "order (default: pallas,xla)")
+    args = ap.parse_args(argv)
+
+    from repro.core.lazy import fresh_runtime
+    from repro.core.obs import explain
+
+    backends = tuple(b for b in args.backend.split(",") if b)
+    with fresh_runtime(algorithm=args.algorithm,
+                       cost_model=args.cost_model,
+                       backend=backends) as rt:
+        demo_program(rt)
+        report = explain(rt)
+        print(report.to_json() if args.json else report.format_text())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
