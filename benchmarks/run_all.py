@@ -1,10 +1,10 @@
 """Canonical perf snapshot — one JSON artifact per commit (ISSUE 4), plus
-the CI perf-regression gate (ISSUE 5) and the cross-flush loop-fusion
-speedup gate (ISSUE 6).
+the CI perf-regression gate (ISSUE 5), the cross-flush loop-fusion speedup
+gate (ISSUE 6) and the serving-runtime gate (ISSUE 8).
 
-    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_6.json [--quick]
-    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_6.json \\
-        --compare BENCH_6.json --tolerance 0.25      # gate vs the baseline
+    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_8.json [--quick]
+    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_8.json \\
+        --compare BENCH_8.json --tolerance 0.25      # gate vs the baseline
 
 ``--compare`` loads a baseline snapshot (BEFORE overwriting ``--json``) and
 fails the run when any gated metric regresses past ``--tolerance``:
@@ -22,7 +22,13 @@ fails the run when any gated metric regresses past ``--tolerance``:
   program's speedup may drop below ``base*(1-tol)``;
 * observability: one disabled ``obs.trace.span()`` call may not exceed
   ``OBS_SPAN_NS_CEILING`` nanoseconds (absolute — a property of the
-  disabled fast path, not of the workload or machine baseline).
+  disabled fast path, not of the workload or machine baseline);
+* serving: concurrent multi-tenant results must stay bit-identical to the
+  serial batching-off server (absolute), the fresh-runtime warm start must
+  hit the disk plan store at least once with zero corrupt/stale entries
+  (absolute), p99 submit latency must stay under
+  ``serving.TAIL_RATIO_CEILING`` x p50 (absolute), and QPS may not drop
+  below the machine-normalized ``base*(1-tol)``.
 
 Aggregates the three benchmark families that gate this repo into a single
 machine-readable snapshot, seeding the bench trajectory (CI runs this and
@@ -44,7 +50,11 @@ the trend):
   loop-fused vs per-flush, with the bitwise-identity check (ISSUE 6
   metric; see ``benchmarks.iterative`` for the two reported times);
 * ``obs``               — disabled-tracing span overhead (ns/call) and the
-  span-count profile of one canonical traced flush (ISSUE 7 metric).
+  span-count profile of one canonical traced flush (ISSUE 7 metric);
+* ``serving``           — multi-tenant Server QPS + p50/p99 under mixed
+  coalescable/distinct load, the micro-batched share, the bitwise check
+  and the plan-store warm start (ISSUE 8 metric; see
+  ``benchmarks.serving``).
 
 Every section is a summary, not a sweep: the snapshot must stay cheap
 enough to run on every CI push.
@@ -165,6 +175,19 @@ def snap_obs() -> Dict:
     print(f"obs: disabled span {ns:.0f}ns/call, "
           f"{out['n_events']} events for the canonical flush", flush=True)
     return out
+
+
+def snap_serving(quick: bool) -> Dict:
+    from benchmarks.serving import run_bench
+    r = run_bench(tenants=2 if quick else 4,
+                  requests=4 if quick else 8,
+                  size=1024 if quick else 4096)
+    print(f"serving: {r['tenants']} tenants, {r['qps']:.0f} QPS, "
+          f"p50 {r['p50_ms']:.1f}ms p99 {r['p99_ms']:.1f}ms, "
+          f"{r['batched_share']:.0%} batched, "
+          f"warm hits {r['warm']['hits']}, "
+          f"identical={r['bit_identical']}", flush=True)
+    return r
 
 
 def snap_loop_fusion(quick: bool) -> List[Dict]:
@@ -306,12 +329,39 @@ def compare_snapshots(snap: Dict, base: Dict, tolerance: float) -> List[str]:
     if span_ns is not None and span_ns > OBS_SPAN_NS_CEILING:
         fails.append(f"obs: disabled span() costs {span_ns:.0f}ns/call > "
                      f"{OBS_SPAN_NS_CEILING:.0f}ns ceiling")
+    # serving (ISSUE 8): correctness, warm start and the tail ratio are
+    # absolute; QPS takes the machine-normalized relative tolerance
+    srv = snap.get("serving", {})
+    if srv:
+        from benchmarks.serving import TAIL_RATIO_CEILING
+        if not srv.get("bit_identical", True):
+            fails.append("serving: concurrent results not bit-identical "
+                         "to the serial batching-off server")
+        warm = srv.get("warm", {})
+        if warm.get("hits", 1) < 1:
+            fails.append("serving: fresh-runtime warm start never hit "
+                         "the disk plan store")
+        if warm.get("corrupt", 0) or warm.get("stale", 0):
+            fails.append(
+                f"serving: warm start flagged store entries "
+                f"(corrupt={warm.get('corrupt')}, stale={warm.get('stale')})")
+        tail = srv.get("p99_ms", 0.0) / max(srv.get("p50_ms", 1e-9), 1e-9)
+        if tail > TAIL_RATIO_CEILING:
+            fails.append(f"serving: p99/p50 = {tail:.0f}x > "
+                         f"{TAIL_RATIO_CEILING:.0f}x ceiling")
+        b_srv = base.get("serving", {})
+        if b_srv.get("qps") and srv.get("qps") is not None:
+            qps_floor = b_srv["qps"] / ratio * (1.0 - tolerance)
+            if srv["qps"] < qps_floor:
+                fails.append(
+                    f"serving: {srv['qps']:.0f} QPS < {qps_floor:.0f} "
+                    f"(base {b_srv['qps']:.0f}, machine ratio {ratio:.2f})")
     return fails
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default="BENCH_6.json",
+    ap.add_argument("--json", default="BENCH_8.json",
                     help="output path for the snapshot JSON")
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer device counts")
@@ -342,6 +392,7 @@ def main() -> None:
         "mixed_lowering": snap_mixed_lowering(),
         "loop_fusion": snap_loop_fusion(args.quick),
         "obs": snap_obs(),
+        "serving": snap_serving(args.quick),
     }
     snap["wall_s"] = time.time() - t0
     with open(args.json, "w") as f:

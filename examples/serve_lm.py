@@ -5,29 +5,65 @@
 Exercises ``serve_prefill`` + ``serve_decode`` (the functions the dry-run
 lowers for the decode_32k / long_500k cells) with greedy sampling on the
 reduced config.
+
+``--serve-bench`` runs the multi-tenant serving benchmark instead
+(DESIGN.md §18): N tenant threads submit mixed coalescable/distinct
+requests through one shared :class:`repro.core.serve.Server`, reporting
+QPS and p50/p99 submit latency, the micro-batched share, the bitwise
+check against a batching-off serial server, and the plan-store warm
+start — the same measurement ``benchmarks/run_all.py`` records as the
+``serving`` snapshot section:
+
+    PYTHONPATH=src python examples/serve_lm.py --serve-bench \\
+        [--tenants 4] [--requests 8] [--ci]
 """
 
 import argparse
+import os
 import sys
 import time
 
 sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax                                            # noqa: E402
 import jax.numpy as jnp                               # noqa: E402
 import numpy as np                                    # noqa: E402
 
-from repro.configs import ARCHS, get_config           # noqa: E402
-from repro.models.transformer import (init_params, serve_decode,   # noqa
-                                      serve_prefill)
+
+def serve_bench(args) -> None:
+    from benchmarks import serving
+    sys.argv = ["serving", "--tenants", str(args.tenants),
+                "--requests", str(args.requests)] + \
+        (["--ci"] if args.ci else [])
+    serving.main()
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b", choices=ARCHS)
+    ap.add_argument("--arch", default="qwen3-4b", choices=None)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--serve-bench", action="store_true",
+                    help="run the multi-tenant Server QPS/latency bench "
+                         "instead of the decode example")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--ci", action="store_true",
+                    help="with --serve-bench: assert the bitwise, "
+                         "warm-start and tail-latency gates")
     args = ap.parse_args()
+
+    if args.serve_bench:
+        serve_bench(args)
+        sys.exit(0)
+
+    from repro.configs import ARCHS, get_config
+    from repro.models.transformer import (init_params, serve_decode,
+                                          serve_prefill)
+    if args.arch not in ARCHS:
+        raise SystemExit(f"unknown --arch {args.arch}; choices: {ARCHS}")
 
     cfg = get_config(args.arch, smoke=True)
     params, _ = init_params(cfg, jax.random.PRNGKey(0))

@@ -181,6 +181,14 @@ class ShardMapBackend(LoweringBackend):
         from ..ir import COMM_OPS
         n_comms = len({_comm_key(op) for op in ops if op.opcode in COMM_OPS})
         if n_comms:
-            stats["collectives"] = stats.get("collectives", 0) + n_comms
-            stats["interconnect_bytes"] = (stats.get("interconnect_bytes", 0.0)
-                                           + block_comm_bytes(ops))
+            # atomic inc on the live StatsView when available (concurrent
+            # flushes, DESIGN.md §18); plain dicts keep the legacy idiom
+            inc = getattr(stats, "inc", None)
+            if inc is not None:
+                inc("collectives", n_comms)
+                inc("interconnect_bytes", block_comm_bytes(ops))
+            else:
+                stats["collectives"] = stats.get("collectives", 0) + n_comms
+                stats["interconnect_bytes"] = (
+                    stats.get("interconnect_bytes", 0.0)
+                    + block_comm_bytes(ops))

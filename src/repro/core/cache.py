@@ -19,6 +19,7 @@ uid mapping are the same loop body.
 from __future__ import annotations
 
 import operator
+import threading
 from collections import OrderedDict
 from typing import List, Optional, Sequence, Tuple
 
@@ -387,38 +388,49 @@ class MergeCache:
     lowering_decisions)`` tuples (immutable nested tuples) so a hit skips
     both the partitioner (stage 3) and backend probing (stage 5), and loop
     plans (DESIGN.md §16) live beside them under a ``("loop",) + key``
-    prefix."""
+    prefix.
+
+    Thread-safe (DESIGN.md §18): one re-entrant lock serializes lookups,
+    insertions and the LRU reorder — N sessions flushing concurrently share
+    one cache, and the worst concurrent outcome is two threads planning the
+    same cold tape and racing benign identical ``put``s."""
 
     def __init__(self, capacity: int = 512):
         self.capacity = capacity
         self._store: "OrderedDict[Tuple, object]" = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
     def __contains__(self, key: Tuple) -> bool:
-        return key in self._store      # no LRU touch, no hit/miss count
+        with self._lock:
+            return key in self._store  # no LRU touch, no hit/miss count
 
     def get(self, key: Tuple):
-        got = self._store.get(key)
-        if got is None:
-            self.misses += 1
-        else:
-            self.hits += 1
-            self._store.move_to_end(key)
-        return got
+        with self._lock:
+            got = self._store.get(key)
+            if got is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+                self._store.move_to_end(key)
+            return got
 
     def put(self, key: Tuple, value) -> None:
-        if key in self._store:
-            self._store.move_to_end(key)
-        elif len(self._store) >= self.capacity:
-            self._store.popitem(last=False)   # evict least-recently-used
-            self.evictions += 1
-        self._store[key] = value
+        with self._lock:
+            if key in self._store:
+                self._store.move_to_end(key)
+            elif len(self._store) >= self.capacity:
+                self._store.popitem(last=False)  # evict least-recently-used
+                self.evictions += 1
+            self._store[key] = value
 
     def clear(self) -> None:
-        self._store.clear()
-        self.hits = self.misses = self.evictions = 0
+        with self._lock:
+            self._store.clear()
+            self.hits = self.misses = self.evictions = 0

@@ -19,6 +19,7 @@ signature)``, so iterative workloads (the paper's merge-cache scenario,
 
 from __future__ import annotations
 
+import threading
 import time
 from collections.abc import Mapping
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -269,7 +270,17 @@ def stats_delta(before: Mapping, after: Mapping) -> Dict:
     .StatsView` alike, and always returns plain dicts.  Deltas are clamped
     at zero: ``reset_stats()`` between the two observations (e.g. mid-way
     through a deferred loop-fusion window) would otherwise make the next
-    drain's delta negative, which no consumer can interpret."""
+    drain's delta negative, which no consumer can interpret.
+
+    A live ``StatsView`` operand is first materialized under its registry
+    lock (``StatsView.snapshot``): reading it key by key while another
+    thread flushes would tear the view — counters observed at different
+    instants — and silently misattribute increments (DESIGN.md §18)."""
+    from .obs.metrics import StatsView
+    if isinstance(before, StatsView):
+        before = before.snapshot()
+    if isinstance(after, StatsView):
+        after = after.snapshot()
     out: Dict = {}
     for k, v in after.items():
         if isinstance(v, Mapping):
@@ -331,6 +342,10 @@ class BlockExecutor:
         self.backends: Tuple[str, ...] = default_stack(backend, mesh)
         self._cache: Dict[Tuple, Tuple] = {}
         self._decisions: Dict[Tuple, object] = {}
+        #: guards the executable/decision caches under concurrent flushes
+        #: (DESIGN.md §18).  Builds happen OUTSIDE the lock — two threads
+        #: racing a cold key may both compile; last put wins, both work.
+        self._lock = threading.RLock()
         self._empty_salts = None
         self.sync_store: Dict[int, jnp.ndarray] = {}
         #: the single backing store for every executor observation
@@ -353,32 +368,39 @@ class BlockExecutor:
         ``pallas_blocks`` or in ``pallas_fallback_blocks`` with the reason
         slug counted in ``pallas_fallbacks`` (``codegen.REASONS``,
         DESIGN.md §13), so ``pallas_blocks / (pallas_blocks +
-        pallas_fallback_blocks)`` is the executed kernel coverage."""
+        pallas_fallback_blocks)`` is the executed kernel coverage.
+
+        The whole re-declaration happens under the registry lock: a
+        ``snapshot_stats`` racing the reset sees either the old counters or
+        the zeroed shape, never a half-cleared mix."""
         st = self.stats
-        for key in ("blocks_run", "exec_cache_hits", "exec_cache_misses",
-                    "donated_buffers", "pallas_blocks",
-                    "pallas_fallback_blocks"):
-            st.declare_scalar(key)
-        st.declare_group("pallas_fallbacks", ("reason",))
-        for key in ("loop_flushes", "loop_iterations"):
-            st.declare_scalar(key)
-        st.declare_group("backend_blocks", ("backend",),
-                         presets=self.backends)
-        st.declare_group("backend_fallbacks", ("backend", "reason"),
-                         presets=self.backends)
-        if "shard_map" in self.backends:
-            st.declare_scalar("shard_map_blocks")
-            st.declare_scalar("collectives")
-            st.declare_scalar("interconnect_bytes", 0.0)
-        else:
-            for key in ("shard_map_blocks", "collectives",
-                        "interconnect_bytes"):
-                st.drop(key)
+        with self.metrics.lock:
+            for key in ("blocks_run", "exec_cache_hits", "exec_cache_misses",
+                        "donated_buffers", "pallas_blocks",
+                        "pallas_fallback_blocks"):
+                st.declare_scalar(key)
+            st.declare_group("pallas_fallbacks", ("reason",))
+            for key in ("loop_flushes", "loop_iterations"):
+                st.declare_scalar(key)
+            st.declare_group("backend_blocks", ("backend",),
+                             presets=self.backends)
+            st.declare_group("backend_fallbacks", ("backend", "reason"),
+                             presets=self.backends)
+            if "shard_map" in self.backends:
+                st.declare_scalar("shard_map_blocks")
+                st.declare_scalar("collectives")
+                st.declare_scalar("interconnect_bytes", 0.0)
+            else:
+                for key in ("shard_map_blocks", "collectives",
+                            "interconnect_bytes"):
+                    st.drop(key)
 
     def snapshot_stats(self) -> Dict:
         """Plain nested-dict copy of the counters, for before/after flush
-        deltas (``stats_delta``)."""
-        return self.stats.to_dict()
+        deltas (``stats_delta``).  Taken under the registry lock so a
+        snapshot racing a concurrent flush (or ``reset_stats``) is a
+        consistent point-in-time view, never a torn one."""
+        return self.stats.snapshot()
 
     # -- policy --------------------------------------------------------
     def donation_enabled(self) -> bool:
@@ -444,10 +466,12 @@ class BlockExecutor:
         so steady-state dispatches skip the probing."""
         from .backends import select_lowering
         key = self._cache_key(ops, plan)
-        d = self._decisions.get(key)
+        with self._lock:
+            d = self._decisions.get(key)
         if d is None:
             d = select_lowering(ops, plan, self.backends, ctx)
-            self._decisions[key] = d
+            with self._lock:
+                self._decisions[key] = d
         return d
 
     def _executable(self, decision, ops: Sequence[Op], plan, ctx) -> Tuple:
@@ -459,12 +483,13 @@ class BlockExecutor:
         cold ones include trace+compile time)."""
         from .backends import LoweringDecision, get_backend
         key = self._cache_key(ops, plan, backend=decision.backend, ctx=ctx)
-        cached = self._cache.get(key)
+        with self._lock:
+            cached = self._cache.get(key)
         if cached is not None:
-            self.stats["exec_cache_hits"] += 1
+            self.stats.inc("exec_cache_hits")
             trace.instant("cache.exec", hit=True, backend=decision.backend)
             return (*cached, True)
-        self.stats["exec_cache_misses"] += 1
+        self.stats.inc("exec_cache_misses")
         trace.instant("cache.exec", hit=False, backend=decision.backend)
         with trace.span("build", backend=decision.backend,
                         n_ops=len(ops)):
@@ -486,30 +511,31 @@ class BlockExecutor:
             if self.jit:
                 fn = jax.jit(fn, donate_argnums=donate)
         entry = (fn, bool(donate), decision)
-        self._cache[key] = entry
+        with self._lock:
+            self._cache[key] = entry
         return (*entry, False)
 
     def _account(self, decision, plan, donates: bool) -> None:
-        """Uniform per-dispatch stats plus the legacy aliases."""
+        """Uniform per-dispatch stats plus the legacy aliases.  Every update
+        is an atomic ``StatsView.inc`` — concurrent session flushes
+        (DESIGN.md §18) must not lose increments to read-modify-write
+        races, and the stress suite asserts exact totals."""
         st = self.stats
-        st["blocks_run"] += 1
-        bb = st["backend_blocks"]
-        bb[decision.backend] = bb.get(decision.backend, 0) + 1
+        st.inc("blocks_run")
+        st.inc("backend_blocks", labels=(decision.backend,))
         for name, reason in decision.declined:
-            fr = st["backend_fallbacks"].setdefault(name, {})
-            fr[reason] = fr.get(reason, 0) + 1
+            st.inc("backend_fallbacks", labels=(name, reason))
         if decision.backend == "pallas":
-            st["pallas_blocks"] += 1
+            st.inc("pallas_blocks")
         else:
             pr = decision.reason_for("pallas")
             if pr is not None:
-                st["pallas_fallback_blocks"] += 1
-                fb = st["pallas_fallbacks"]
-                fb[pr] = fb.get(pr, 0) + 1
+                st.inc("pallas_fallback_blocks")
+                st.inc("pallas_fallbacks", labels=(pr,))
         if decision.backend == "shard_map":
-            st["shard_map_blocks"] = st.get("shard_map_blocks", 0) + 1
+            st.inc("shard_map_blocks")
         if donates:
-            st["donated_buffers"] += len(plan.donatable)
+            st.inc("donated_buffers", len(plan.donatable))
 
     def run_schedule(self, schedule, buffers: Dict[int, jnp.ndarray]) -> None:
         """Dispatch a planned flush (stage 6) against the buffer store.
@@ -602,13 +628,14 @@ class BlockExecutor:
             donate = not any(id(b) in synced for b in state)
         key = ("loop", loop_plan.key, int(salts.shape[0]), donate)
         with trace.span("stage.execute", loop=True, n_iterations=int(n)):
-            cached = self._cache.get(key)
+            with self._lock:
+                cached = self._cache.get(key)
             if cached is not None:
-                self.stats["exec_cache_hits"] += 1
+                self.stats.inc("exec_cache_hits")
                 trace.instant("cache.exec", hit=True, loop=True)
                 fn = cached[0]
             else:
-                self.stats["exec_cache_misses"] += 1
+                self.stats.inc("exec_cache_misses")
                 trace.instant("cache.exec", hit=False, loop=True)
                 with trace.span("build", loop=True,
                                 n_ops=len(loop_plan.tape)):
@@ -620,10 +647,62 @@ class BlockExecutor:
                     if self.jit:
                         fn = jax.jit(fn,
                                      donate_argnums=(3,) if donate else ())
-                self._cache[key] = (fn,)
-            self.stats["loop_flushes"] += 1
-            self.stats["loop_iterations"] += int(n)
+                with self._lock:
+                    self._cache[key] = (fn,)
+            self.stats.inc("loop_flushes")
+            self.stats.inc("loop_iterations", int(n))
             if donate:
-                self.stats["donated_buffers"] += len(state)
+                self.stats.inc("donated_buffers", len(state))
             return tuple(fn(jnp.int32(n), salts, tuple(invariants),
                             tuple(state)))
+
+    def run_batch(self, schedule, tape_inputs: Sequence[int],
+                  tape_outputs: Sequence[int],
+                  in_cols: Sequence[Sequence], salt_rows: Sequence[Sequence[int]]
+                  ) -> List:
+        """Dispatch B structurally-identical flushes as ONE vmapped
+        executable (cross-request micro-batching, DESIGN.md §18).
+
+        ``schedule`` is the lead request's planned flush (the structural
+        template), ``tape_inputs``/``tape_outputs`` its tape-level io in
+        canonical ``cache.tape_io`` order, ``in_cols`` one column per input
+        position (each a length-B list of flat buffers, request order) and
+        ``salt_rows`` one row per request of that request's ``random``-op
+        salts (schedule work-block order).  Returns one ``(B, size)``
+        stacked buffer per output position; the caller scatters row ``r``
+        back into request ``r``'s buffer store.
+
+        The executable is cached under ``("serve_batch", plan key, B)`` —
+        the batch width is a static shape, so each width compiles once and
+        every later window of that width re-dispatches it."""
+        B = len(salt_rows)
+        plan_key = (schedule.key if schedule.key is not None
+                    else tuple(p.signature for p in schedule.blocks))
+        key = ("serve_batch", plan_key, B)
+        with trace.span("serve.batch", n_requests=B):
+            with self._lock:
+                cached = self._cache.get(key)
+            if cached is not None:
+                self.stats.inc("exec_cache_hits")
+                trace.instant("cache.exec", hit=True, batch=True)
+                fn, n_rand = cached
+            else:
+                self.stats.inc("exec_cache_misses")
+                trace.instant("cache.exec", hit=False, batch=True)
+                with trace.span("build", batch=True,
+                                n_ops=len(schedule.tape)):
+                    from .backends.batch_body import build_batch_fn
+                    fn, n_rand = build_batch_fn(
+                        schedule.tape, schedule.blocks,
+                        tuple(tape_inputs), tuple(tape_outputs),
+                        self.lowering_context())
+                    if self.jit:
+                        fn = jax.jit(fn)
+                with self._lock:
+                    self._cache[key] = (fn, n_rand)
+            self.metrics.counter("serve.batch.dispatches").inc()
+            self.metrics.counter("serve.batch.requests").inc(B)
+            stacked = tuple(jnp.stack(list(col)) for col in in_cols)
+            salts = jnp.asarray(
+                np.asarray(salt_rows, dtype=np.int32).reshape(B, n_rand))
+            return list(fn(stacked, salts))

@@ -12,6 +12,7 @@ via explicit ``.delete()``.
 from __future__ import annotations
 
 import contextlib
+import threading
 import time
 from collections import deque
 from typing import Dict, List, Optional, Tuple, Union
@@ -88,6 +89,22 @@ class Runtime:
     loop_unroll : max deferred iterations per fused loop dispatch (also
         the loop executable's salt capacity — one compile per structure
         serves every drain size).
+    plan_store : optional persistent plan cache (DESIGN.md §18): a
+        ``repro.core.serve.PlanStore`` instance or a directory path.  The
+        scheduler probes it on a merge-cache miss and persists fresh plans,
+        so a warm process start replays block plans and lowering decisions
+        from disk without re-running graph/partition/lower.
+
+    **Concurrency contract** (DESIGN.md §18).  One ``Runtime`` instance is
+    single-threaded state: the tape, buffer store, refcounts and loop-fuser
+    queue have no internal locking, so exactly one thread may trace/flush a
+    given runtime at a time.  Concurrency happens through *sessions*:
+    :meth:`session` returns a lightweight per-tenant ``Runtime`` with its
+    own tape/buffers that SHARES this runtime's scheduler (merge cache +
+    plan store) and executor (executable cache, metrics registry) — those
+    shared structures are individually thread-safe, so N threads may flush
+    N sessions concurrently.  Arrays belong to the session that recorded
+    them and must not be used from another session or thread.
     """
 
     def __init__(self, algorithm: str = "greedy", cost_model: str = "bohrium",
@@ -95,18 +112,31 @@ class Runtime:
                  seed: int = 0, jit: bool = True, backend="xla",
                  donate="auto", mesh=None, history_limit: int = 1024,
                  profiler=None, loop_fusion: bool = True,
-                 loop_threshold: int = 3, loop_unroll: int = 32):
+                 loop_threshold: int = 3, loop_unroll: int = 32,
+                 plan_store=None, _scheduler: Optional[Scheduler] = None,
+                 _executor: Optional[BlockExecutor] = None):
         self.algorithm = algorithm
         self.cost_model = cost_model
         self.use_cache = use_cache
         self.node_budget = node_budget
         self.tape: List[Op] = []
         self.buffers: Dict[int, jnp.ndarray] = {}
-        self.scheduler = Scheduler(MergeCache())
+        # sessions share their parent's planning/execution state (the
+        # `_scheduler`/`_executor` private params); a root runtime builds
+        # its own
+        self.scheduler = (_scheduler if _scheduler is not None
+                          else Scheduler(MergeCache()))
         self.cache = self.scheduler.cache
-        self.executor = BlockExecutor(seed=seed, jit=jit, backend=backend,
-                                      donate=donate, mesh=mesh,
-                                      profiler=profiler)
+        self.executor = (_executor if _executor is not None
+                         else BlockExecutor(seed=seed, jit=jit,
+                                            backend=backend, donate=donate,
+                                            mesh=mesh, profiler=profiler))
+        if plan_store is not None:
+            from .serve.store import PlanStore
+            if not isinstance(plan_store, PlanStore):
+                plan_store = PlanStore(plan_store)
+            plan_store.bind_metrics(self.executor.metrics)
+            self.scheduler.plan_store = plan_store
         from .loop import LoopFuser
         self._loop = (LoopFuser(threshold=loop_threshold, unroll=loop_unroll)
                       if loop_fusion else None)
@@ -277,36 +307,78 @@ class Runtime:
         self.buffers[base.uid] = jnp.asarray(arr.reshape(-1))
         return LazyArray(self, View.contiguous(base, arr.shape))
 
+    # -- sessions (concurrent serving, DESIGN.md §18) ------------------
+    def session(self, *, loop_fusion: bool = False, **kw) -> "Runtime":
+        """A per-tenant runtime sharing this runtime's scheduler (merge
+        cache + plan store) and executor (executable cache, metrics) but
+        with private tape/buffers/refcounts.  Each session is
+        single-threaded; N sessions may trace+flush concurrently from N
+        threads.  Loop fusion defaults OFF in sessions — a serving request
+        is usually one flush, and the fuser's deferral window would hold
+        results hostage across requests."""
+        kw.setdefault("algorithm", self.algorithm)
+        kw.setdefault("cost_model", self.cost_model)
+        kw.setdefault("use_cache", self.use_cache)
+        kw.setdefault("node_budget", self.node_budget)
+        return Runtime(loop_fusion=loop_fusion,
+                       _scheduler=self.scheduler, _executor=self.executor,
+                       **kw)
 
+    @contextlib.contextmanager
+    def activate(self):
+        """Make this runtime the calling thread's active runtime: the
+        module-level constructors (``zeros``/``random``/…) and ``flush()``
+        route here for the duration.  Thread-local — other threads'
+        active runtimes are untouched."""
+        prev = getattr(_active, "rt", None)
+        _active.rt = self
+        try:
+            yield self
+        finally:
+            _active.rt = prev
+
+
+#: process-default runtime (what module-level ops use when no runtime is
+#: activated on the calling thread)
 _rt = Runtime()
+#: per-thread active-runtime override (``Runtime.activate`` /
+#: ``fresh_runtime``) — thread-local so concurrent serving threads each
+#: trace onto their own session without swapping the process default
+_active = threading.local()
 
 
 def get_runtime() -> Runtime:
-    return _rt
+    rt = getattr(_active, "rt", None)
+    return rt if rt is not None else _rt
 
 
 def set_policy(algorithm: Optional[str] = None, cost_model: Optional[str] = None,
                use_cache: Optional[bool] = None, node_budget: Optional[int] = None):
+    rt = get_runtime()
     if algorithm is not None:
-        _rt.algorithm = algorithm
+        rt.algorithm = algorithm
     if cost_model is not None:
-        _rt.cost_model = cost_model
+        rt.cost_model = cost_model
     if use_cache is not None:
-        _rt.use_cache = use_cache
+        rt.use_cache = use_cache
     if node_budget is not None:
-        _rt.node_budget = node_budget
+        rt.node_budget = node_budget
 
 
 @contextlib.contextmanager
 def fresh_runtime(**kw):
-    """Context manager giving an isolated runtime (tests/benchmarks)."""
-    global _rt
-    old = _rt
-    _rt = Runtime(**kw)
+    """Context manager giving an isolated runtime (tests/benchmarks).
+
+    The fresh runtime is installed as the CALLING THREAD's active runtime
+    (not the process default), so concurrent threads can each hold their
+    own fresh runtime without clobbering each other."""
+    prev = getattr(_active, "rt", None)
+    rt = Runtime(**kw)
+    _active.rt = rt
     try:
-        yield _rt
+        yield rt
     finally:
-        _rt = old
+        _active.rt = prev
 
 
 # ---------------------------------------------------------------------------
@@ -531,8 +603,9 @@ def _record_elementwise(rt: Runtime, opcode: str, out: View, inputs) -> None:
 def zeros(shape, dtype=np.float64) -> LazyArray:
     if isinstance(shape, int):
         shape = (shape,)
-    out = _alloc(_rt, tuple(shape), dtype)
-    _record_elementwise(_rt, "copy", out.view, (0.0,))
+    rt = get_runtime()
+    out = _alloc(rt, tuple(shape), dtype)
+    _record_elementwise(rt, "copy", out.view, (0.0,))
     return out
 
 
@@ -543,8 +616,9 @@ def ones(shape, dtype=np.float64) -> LazyArray:
 def full(shape, value: Scalar, dtype=np.float64) -> LazyArray:
     if isinstance(shape, int):
         shape = (shape,)
-    out = _alloc(_rt, tuple(shape), dtype)
-    _record_elementwise(_rt, "copy", out.view, (float(value),))
+    rt = get_runtime()
+    out = _alloc(rt, tuple(shape), dtype)
+    _record_elementwise(rt, "copy", out.view, (float(value),))
     return out
 
 
@@ -553,23 +627,25 @@ def empty(shape, dtype=np.float64) -> LazyArray:
 
 
 def arange(n: int, dtype=np.float64) -> LazyArray:
-    out = _alloc(_rt, (int(n),), dtype)
-    _rt.record(Op("range", out.view))
+    rt = get_runtime()
+    out = _alloc(rt, (int(n),), dtype)
+    rt.record(Op("range", out.view))
     return out
 
 
 def random(shape, dtype=np.float64) -> LazyArray:
     if isinstance(shape, int):
         shape = (shape,)
-    out = _alloc(_rt, tuple(shape), dtype)
-    _rt.record(Op("random", out.view))
+    rt = get_runtime()
+    out = _alloc(rt, tuple(shape), dtype)
+    rt.record(Op("random", out.view))
     return out
 
 
 def asarray(a) -> LazyArray:
     if isinstance(a, LazyArray):
         return a
-    return _rt.adopt(np.asarray(a))
+    return get_runtime().adopt(np.asarray(a))
 
 
 def _unary(name):
@@ -634,4 +710,4 @@ def sync(*arrays: LazyArray) -> None:
 
 
 def flush() -> None:
-    _rt.flush()
+    get_runtime().flush()

@@ -15,10 +15,19 @@ its historical nested-dict shape for a dozen call sites (tests, benchmarks,
 sites use (``st["k"] += 1``, ``st["g"][b] = ...``, ``st["g"].setdefault(b,
 {})``, ``dict(st)``) while every number lives in the registry exactly
 once.
+
+**Thread safety** (DESIGN.md §18): every metric carries a lock — metrics
+created through a :class:`MetricsRegistry` all share the registry's single
+re-entrant lock (``registry.lock``), so a whole-registry snapshot taken
+under it is consistent against any concurrent mutation.  ``inc``/``set``/
+``dec``/``observe`` are atomic; the legacy facade idioms (``st["k"] += 1``)
+remain read-modify-write and are NOT safe under concurrency — hot paths
+that run concurrently use :meth:`StatsView.inc` instead.
 """
 
 from __future__ import annotations
 
+import threading
 from collections.abc import Mapping
 from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
 
@@ -40,6 +49,9 @@ class Counter:
         #: value per label-value tuple (``()`` for an unlabeled metric);
         #: insertion order is the rendering order of views and snapshots
         self.values: Dict[Tuple, Number] = {}
+        #: registry-created metrics share the registry's lock; a standalone
+        #: metric gets a private one
+        self.lock: "threading.RLock" = threading.RLock()
 
     def _check(self, labels: Tuple) -> Tuple:
         if len(labels) != len(self.label_names):
@@ -50,16 +62,20 @@ class Counter:
 
     def inc(self, amount: Number = 1, labels: Tuple = ()) -> None:
         labels = self._check(labels)
-        self.values[labels] = self.values.get(labels, 0) + amount
+        with self.lock:
+            self.values[labels] = self.values.get(labels, 0) + amount
 
     def set(self, value: Number, labels: Tuple = ()) -> None:
-        self.values[self._check(labels)] = value
+        labels = self._check(labels)
+        with self.lock:
+            self.values[labels] = value
 
     def get(self, labels: Tuple = (), default: Number = 0) -> Number:
         return self.values.get(labels, default)
 
     def clear(self) -> None:
-        self.values.clear()
+        with self.lock:
+            self.values.clear()
 
 
 class Gauge(Counter):
@@ -91,25 +107,27 @@ class Histogram:
         self.help = help
         # per label tuple: [count, sum, min, max, [bucket counts]]
         self.values: Dict[Tuple, List] = {}
+        self.lock: "threading.RLock" = threading.RLock()
 
     def observe(self, value: Number, labels: Tuple = ()) -> None:
         if len(labels) != len(self.label_names):
             raise ValueError(f"{self.name}: bad labels {labels!r}")
-        d = self.values.get(labels)
-        if d is None:
-            d = [0, 0.0, float("inf"), float("-inf"),
-                 [0] * (len(self.buckets) + 1)]
-            self.values[labels] = d
-        d[0] += 1
-        d[1] += value
-        d[2] = min(d[2], value)
-        d[3] = max(d[3], value)
-        for i, edge in enumerate(self.buckets):
-            if value <= edge:
-                d[4][i] += 1
-                break
-        else:
-            d[4][-1] += 1                  # overflow bucket (> last edge)
+        with self.lock:
+            d = self.values.get(labels)
+            if d is None:
+                d = [0, 0.0, float("inf"), float("-inf"),
+                     [0] * (len(self.buckets) + 1)]
+                self.values[labels] = d
+            d[0] += 1
+            d[1] += value
+            d[2] = min(d[2], value)
+            d[3] = max(d[3], value)
+            for i, edge in enumerate(self.buckets):
+                if value <= edge:
+                    d[4][i] += 1
+                    break
+            else:
+                d[4][-1] += 1              # overflow bucket (> last edge)
 
     def summary(self, labels: Tuple = ()) -> Optional[Dict[str, Any]]:
         d = self.values.get(labels)
@@ -120,7 +138,8 @@ class Histogram:
                                     d[4]))}
 
     def clear(self) -> None:
-        self.values.clear()
+        with self.lock:
+            self.values.clear()
 
 
 Metric = Union[Counter, Gauge, Histogram]
@@ -131,18 +150,27 @@ class MetricsRegistry:
 
     Re-requesting a name returns the existing metric (label names must
     match); requesting it as a different kind is an error — one name, one
-    meaning, for the life of the process."""
+    meaning, for the life of the process.
+
+    Every metric created here shares the registry's re-entrant ``lock``:
+    individual mutations are atomic without it, and holding it makes a
+    multi-metric read (``snapshot``, ``StatsView.to_dict``) consistent
+    against concurrent flushes — no increment is ever half-visible."""
 
     def __init__(self) -> None:
         self._metrics: Dict[str, Metric] = {}
+        #: one lock for the whole registry — shared by every metric in it
+        self.lock: "threading.RLock" = threading.RLock()
 
     def _get_or_create(self, cls: type, name: str,
                        label_names: Tuple[str, ...], **kw: Any) -> Any:
-        m = self._metrics.get(name)
-        if m is None:
-            m = cls(name, label_names, **kw)
-            self._metrics[name] = m
-            return m
+        with self.lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, label_names, **kw)
+                m.lock = self.lock
+                self._metrics[name] = m
+                return m
         if not isinstance(m, cls) or type(m) is not cls:
             raise TypeError(f"metric {name!r} already registered as "
                             f"{m.kind}, requested {cls.kind}")  # type: ignore[attr-defined]
@@ -175,21 +203,23 @@ class MetricsRegistry:
         """Plain-data dump of every metric (JSON-serializable; label-value
         tuples render as comma-joined strings)."""
         out: Dict[str, Dict[str, Any]] = {}
-        for name, m in self._metrics.items():
-            if isinstance(m, Histogram):
-                vals: Dict[str, Any] = {
-                    ",".join(map(str, k)): m.summary(k) for k in m.values}
-            else:
-                vals = {",".join(map(str, k)): v
-                        for k, v in m.values.items()}
-            out[name] = {"kind": m.kind, "labels": list(m.label_names),
-                         "values": vals}
+        with self.lock:
+            for name, m in self._metrics.items():
+                if isinstance(m, Histogram):
+                    vals: Dict[str, Any] = {
+                        ",".join(map(str, k)): m.summary(k) for k in m.values}
+                else:
+                    vals = {",".join(map(str, k)): v
+                            for k, v in m.values.items()}
+                out[name] = {"kind": m.kind, "labels": list(m.label_names),
+                             "values": vals}
         return out
 
     def clear_values(self) -> None:
         """Zero every metric, keeping registrations (observation reset)."""
-        for m in self._metrics.values():
-            m.clear()
+        with self.lock:
+            for m in self._metrics.values():
+                m.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -356,10 +386,35 @@ class StatsView(Mapping):
             self.declare_scalar(key, 0)
         self._scalars[key].set(value)
 
+    # -- atomic mutation (concurrent flush paths) -----------------------
+    def inc(self, key: str, amount: Number = 1,
+            labels: Tuple = ()) -> None:
+        """Atomically add ``amount`` to a scalar (``labels=()``) or to one
+        label-value of a declared group.  Unlike ``st[key] += 1`` — a
+        read-modify-write that loses increments under concurrency — this
+        lands on the metric's own ``inc`` and never drops a count."""
+        if labels:
+            self._groups[key].inc(amount, tuple(labels))
+            return
+        c = self._scalars.get(key)
+        if c is None:
+            with self._reg.lock:           # double-checked declaration
+                c = self._scalars.get(key)
+                if c is None:
+                    self.declare_scalar(key, 0)
+                    c = self._scalars[key]
+        c.inc(amount)
+
     def to_dict(self) -> Dict:
         """Plain nested dicts — what ``snapshot_stats`` hands out."""
         return {k: (v.to_dict() if isinstance(v, LabelView) else v)
                 for k, v in self.items()}
+
+    def snapshot(self) -> Dict:
+        """``to_dict`` under the registry lock: a point-in-time consistent
+        copy even while other threads are mid-flush."""
+        with self._reg.lock:
+            return self.to_dict()
 
     def __eq__(self, other: object) -> bool:
         if isinstance(other, Mapping):

@@ -103,7 +103,18 @@ class Tracer:
         self.dropped = 0
         self._epoch_ns = time.perf_counter_ns()
         self._pid = os.getpid()
-        self._ctx: Dict[str, Any] = {}
+        # the context overlay is per-thread: concurrent serving flushes
+        # (DESIGN.md §18) each carry their own ``flush=<n>`` without
+        # bleeding ids into events another thread emits concurrently
+        self._ctx_local = threading.local()
+
+    @property
+    def _ctx(self) -> Dict[str, Any]:
+        d = getattr(self._ctx_local, "d", None)
+        if d is None:
+            d = {}
+            self._ctx_local.d = d
+        return d
 
     # -- low-level emitters --------------------------------------------
     def _emit(self, ev: Dict[str, Any]) -> None:

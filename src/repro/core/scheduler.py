@@ -154,6 +154,11 @@ class Scheduler:
 
     def __init__(self, cache: Optional[MergeCache] = None):
         self.cache = cache if cache is not None else MergeCache()
+        #: optional persistent plan cache (``repro.core.serve.PlanStore``,
+        #: DESIGN.md §18) — probed after an in-memory merge-cache miss and
+        #: written through on fresh plans, so a warm process start replays
+        #: block structure + lowering decisions from disk
+        self.plan_store = None
 
     def plan(self, tape: Sequence[Op], *, algorithm: str = "greedy",
              cost_model: str = "bohrium", node_budget: int = 100_000,
@@ -185,6 +190,11 @@ class Scheduler:
                                  cost_token=model_cache_token(cost_model))
             entry = self.cache.get(key)
             trace.instant("cache.merge", hit=entry is not None)
+            if entry is None and self.plan_store is not None:
+                entry = self.plan_store.load(key)
+                if entry is not None:
+                    # promote the disk hit so later flushes stay in memory
+                    self.cache.put(key, entry)
             if entry is not None:
                 blocks, decisions = entry
                 cached = True
@@ -211,6 +221,8 @@ class Scheduler:
             stats["t_lower_s"] = time.perf_counter() - t0
         if use_cache and not cached:
             self.cache.put(key, (blocks, decisions))
+            if self.plan_store is not None:
+                self.plan_store.store(key, blocks, decisions)
         return Schedule(tape=list(tape), blocks=plans, result=result,
                         stats=stats, key=key)
 

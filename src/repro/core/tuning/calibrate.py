@@ -32,6 +32,7 @@ coefficients.
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -156,18 +157,26 @@ def fit_profile(profile: Profile) -> Optional[CalibratedFit]:
 
 _ACTIVE: Optional[CalibratedFit] = None
 _EPOCH = 0
+#: serializes epoch bump + publication: two concurrent installs must not
+#: share an epoch, or merge-cache/plan-store keys priced under different
+#: fits would collide (DESIGN.md §18)
+_INSTALL_LOCK = threading.Lock()
 
 
 def install_fit(fit: Optional[CalibratedFit]) -> Optional[CalibratedFit]:
     """Publish ``fit`` as the process-wide calibration (None clears it).
     Bumps the calibration epoch, which the scheduler mixes into merge-cache
-    keys — cached plans priced under the old fit are never replayed."""
+    keys — cached plans priced under the old fit are never replayed.
+    Thread-safe: epoch bump and publication happen under one lock, so every
+    install gets a distinct epoch and readers never see a new fit with an
+    old epoch."""
     global _ACTIVE, _EPOCH
-    _EPOCH += 1
-    if fit is not None:
-        fit = CalibratedFit(**{**fit.__dict__, "epoch": _EPOCH})
-    _ACTIVE = fit
-    return fit
+    with _INSTALL_LOCK:
+        _EPOCH += 1
+        if fit is not None:
+            fit = CalibratedFit(**{**fit.__dict__, "epoch": _EPOCH})
+        _ACTIVE = fit
+        return fit
 
 
 def current_fit() -> Optional[CalibratedFit]:

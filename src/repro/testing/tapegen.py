@@ -437,8 +437,124 @@ def check_loop(seed: int, *, n_actions: int = 6, size: int = 64,
                         f"seed {seed} [{backend} loop-fused vs per-flush]")
 
 
+def check_serve(seed: int, *, tenants: int = 4, requests: int = 2,
+                n_actions: int = 8, size: int = 64) -> None:
+    """Concurrent serving == serial execution, bitwise (DESIGN.md §18).
+
+    Phase 1 — **concurrent sessions**: a seeded shuffle assigns ``tenants``
+    distinct :class:`TapeProgram`\\ s to per-tenant sessions of ONE shared
+    runtime; all tenants run simultaneously from their own threads (barrier
+    start, many interleaved flushes against the shared merge/executable
+    caches) and every tenant's outputs must match its own serial
+    fresh-runtime run bit for bit.
+
+    Phase 2 — **micro-batching**: every tenant submits the same seeded
+    request recipe (same structure, private data, per-session RNG salts)
+    through a batching :class:`~repro.core.serve.Server` concurrently; the
+    reference is a batching-OFF server driven serially.  The vmapped
+    batched dispatch must be bitwise identical to the per-session flush
+    path — including ``random`` draws, which ride the salt matrix."""
+    import threading
+
+    from repro.core import lazy as bh
+    from repro.core.lazy import Runtime
+    from repro.core.serve import Server
+
+    rnd = random.Random(seed ^ 0x5EABE17)
+
+    # -- phase 1: N threads x N structurally-distinct programs ----------
+    progs = [TapeProgram(rnd.randrange(1_000_000), n_actions=n_actions,
+                         size=size, exact=True) for _ in range(tenants)]
+    rnd.shuffle(progs)
+    refs = [p.run() for p in progs]
+    rt = Runtime(loop_fusion=False)
+    sessions = [rt.session() for _ in range(tenants)]
+    results: List = [None] * tenants
+    errors: List = []
+    barrier = threading.Barrier(tenants)
+
+    def worker(i: int) -> None:
+        try:
+            barrier.wait()
+            with sessions[i].activate():
+                results[i] = progs[i].run_current()
+        except BaseException as e:      # noqa: BLE001 — re-raised below
+            errors.append((i, e))
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(tenants)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise AssertionError(
+            f"seed {seed}: concurrent session failed: {errors[0]!r}")
+    for i in range(tenants):
+        _assert_bitwise(refs[i], results[i],
+                        f"seed {seed} [tenant {i} concurrent vs serial]")
+
+    # -- phase 2: batched server vs serial batching-off server ----------
+    def request_fn(rseed: int, data: np.ndarray):
+        def fn():
+            r = random.Random(rseed)
+            a = bh.asarray(data)
+            x = a
+            for _ in range(n_actions):
+                act = r.randrange(5)
+                if act == 0:
+                    x = bh.floor((x * r.choice((0.5, 2.0, 3.0))) % _MOD)
+                elif act == 1:
+                    x = x + float(r.randrange(-4, 5))
+                elif act == 2:
+                    x = bh.maximum(x, a)
+                elif act == 3:
+                    x = x + bh.floor(bh.random(x.shape) * 8.0)
+                else:
+                    x = bh.where(x > a, x, a)
+            return x
+        return fn
+
+    npr = np.random.default_rng(seed)
+    datas = [np.floor(npr.random(size) * 16.0) for _ in range(tenants)]
+    rseeds = [rnd.randrange(1_000_000) for _ in range(requests)]
+
+    ref_srv = Server(batching=False)
+    refs2 = {(i, r): ref_srv.submit(i, request_fn(rs, datas[i]))
+             for r, rs in enumerate(rseeds) for i in range(tenants)}
+
+    srv = Server(window_s=0.25, max_batch=tenants)
+    out2: dict = {}
+    errors2: List = []
+    barrier2 = threading.Barrier(tenants)
+
+    def serve_worker(i: int) -> None:
+        try:
+            for r, rs in enumerate(rseeds):
+                barrier2.wait()
+                out2[(i, r)] = srv.submit(i, request_fn(rs, datas[i]))
+        except BaseException as e:      # noqa: BLE001 — re-raised below
+            errors2.append((i, e))
+
+    threads = [threading.Thread(target=serve_worker, args=(i,))
+               for i in range(tenants)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors2:
+        raise AssertionError(
+            f"seed {seed}: batched serve failed: {errors2[0]!r}")
+    for k in refs2:
+        _assert_bitwise([refs2[k]], [out2[k]],
+                        f"seed {seed} [tenant/request {k} batched vs serial]")
+    batched = srv.metrics.counter("serve.batched_requests").get()
+    assert batched > 0, \
+        f"seed {seed}: no request ever coalesced (window too small?)"
+
+
 CHECKS = {"graph": check_graph, "exec": check_exec, "dist": check_dist,
-          "loop": check_loop}
+          "loop": check_loop, "serve": check_serve}
 
 
 def check_seed(seed: int, checks: Sequence[str] = ("graph", "exec"),
@@ -457,6 +573,9 @@ def check_seed(seed: int, checks: Sequence[str] = ("graph", "exec"),
         elif name == "loop":
             check_loop(seed, n_actions=max(3, kw.get("n_actions", 20) // 3),
                        size=kw.get("size", 64))
+        elif name == "serve":
+            check_serve(seed, n_actions=max(4, kw.get("n_actions", 20) // 3),
+                        size=kw.get("size", 64))
         else:
             raise ValueError(f"unknown check {name!r}; have {sorted(CHECKS)}")
 
