@@ -1,10 +1,11 @@
 """Canonical perf snapshot — one JSON artifact per commit (ISSUE 4), plus
 the CI perf-regression gate (ISSUE 5), the cross-flush loop-fusion speedup
-gate (ISSUE 6) and the serving-runtime gate (ISSUE 8).
+gate (ISSUE 6), the serving-runtime gate (ISSUE 8) and the ILP
+partition-quality gate (ISSUE 9).
 
-    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_8.json [--quick]
-    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_8.json \\
-        --compare BENCH_8.json --tolerance 0.25      # gate vs the baseline
+    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_9.json [--quick]
+    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_9.json \\
+        --compare BENCH_9.json --tolerance 0.25      # gate vs the baseline
 
 ``--compare`` loads a baseline snapshot (BEFORE overwriting ``--json``) and
 fails the run when any gated metric regresses past ``--tolerance``:
@@ -23,6 +24,11 @@ fails the run when any gated metric regresses past ``--tolerance``:
 * observability: one disabled ``obs.trace.span()`` call may not exceed
   ``OBS_SPAN_NS_CEILING`` nanoseconds (absolute — a property of the
   disabled fast path, not of the workload or machine baseline);
+* partition quality: the ILP backend may never report a calibrated plan
+  cost above either greedy baseline (the anytime never-worse contract,
+  absolute — model costs are deterministic), and at least
+  ``ILP_MIN_IMPROVED`` paper programs must keep a strict improvement over
+  the default (byte-model greedy) planner;
 * serving: concurrent multi-tenant results must stay bit-identical to the
   serial batching-off server (absolute), the fresh-runtime warm start must
   hit the disk plan store at least once with zero corrupt/stale entries
@@ -46,6 +52,9 @@ the trend):
 * ``mixed_lowering``    — per-backend block counts of one representative
   ``backend='pallas'`` flush (ISSUE 4: the lower stage routing one flush
   across ≥ 2 backends);
+* ``partition_quality`` — calibrated plan cost of the default greedy
+  planner vs ``partition_backend="ilp"`` per paper program, with the
+  solver's optimality gap and wall clock (ISSUE 9 metric);
 * ``loop_fusion``       — iterative-suite per-iteration wall-clock,
   loop-fused vs per-flush, with the bitwise-identity check (ISSUE 6
   metric; see ``benchmarks.iterative`` for the two reported times);
@@ -190,6 +199,85 @@ def snap_serving(quick: bool) -> Dict:
     return r
 
 
+def snap_partition_quality(quick: bool) -> Dict:
+    """ISSUE 9 metric: calibrated cost of greedy vs ILP plans per paper
+    benchmark program.
+
+    Captures every structurally-distinct flush tape of each program, then
+    prices three plans under the *calibrated* cost model (the measured
+    objective; with no fit installed it degenerates to the analytic
+    ``tpu`` pricing):
+
+    * ``cost_greedy_default``  — the production default planner (greedy
+      under the sparse ``bohrium`` byte model), its plan re-priced under
+      the calibrated model.  Zero-byte-saving merges are invisible to the
+      byte model, so this plan pays dispatch overhead the calibrated
+      objective sees;
+    * ``cost_greedy``          — greedy solving the calibrated objective
+      directly (the ILP warm start);
+    * ``cost_ilp``             — ``partition_backend="ilp"`` with a per-tape
+      wall-clock budget, plus the solver's reported optimality gap.
+
+    The ``--compare`` gate asserts ilp never exceeds either greedy cost
+    (the anytime contract) and that at least ``ILP_MIN_IMPROVED`` programs
+    keep a strict improvement over the default planner."""
+    from benchmarks.programs import BENCHMARKS
+    from repro.core import partition
+    from repro.core.cache import tape_signature
+    from repro.core.cost import make_cost_model
+    from repro.core.lazy import fresh_runtime
+
+    cal = make_cost_model("calibrated")
+    budget = 0.25 if quick else 1.0
+    rows: List[Dict] = []
+    for name, fn in BENCHMARKS.items():
+        tapes: List[List] = []
+        seen: set = set()
+        with fresh_runtime(algorithm="greedy", cost_model="bohrium",
+                           loop_fusion=False) as rt:
+            orig = rt.scheduler.plan
+
+            def plan(tape, *a, _orig=orig, seen=seen, tapes=tapes, **kw):
+                sig = tape_signature(tape, "greedy", "calibrated")
+                if sig not in seen:
+                    seen.add(sig)
+                    tapes.append(list(tape))
+                return _orig(tape, *a, **kw)
+
+            rt.scheduler.plan = plan
+            fn()
+        c_def = c_greedy = c_ilp = wall = max_gap = 0.0
+        statuses: Dict[str, int] = {}
+        for tape in tapes:
+            r_def = partition(tape, algorithm="greedy", cost_model="bohrium")
+            c_def += cal.partition_cost(list(r_def.state.blocks.values()))
+            c_greedy += partition(tape, algorithm="greedy",
+                                  cost_model="calibrated").cost
+            r_ilp = partition(tape, cost_model="calibrated",
+                              partition_backend="ilp", time_budget_s=budget)
+            c_ilp += r_ilp.cost
+            wall += r_ilp.stats["ilp_wall_s"]
+            max_gap = max(max_gap, r_ilp.stats["ilp_gap"])
+            s = r_ilp.stats["ilp_status"]
+            statuses[s] = statuses.get(s, 0) + 1
+        imp = (1.0 - c_ilp / c_def) if c_def else 0.0
+        rows.append({"program": name, "tapes": len(tapes),
+                     "cost_greedy_default": c_def,
+                     "cost_greedy": c_greedy,
+                     "cost_ilp": c_ilp,
+                     "improvement": imp,
+                     "max_gap": max_gap,
+                     "solver_wall_s": wall,
+                     "statuses": statuses})
+        print(f"partition_quality/{name}: greedy(default) {c_def:.3e} "
+              f"-> ilp {c_ilp:.3e} ({imp:+.1%}), max gap {max_gap:.2f}, "
+              f"solver {wall:.2f}s {statuses}", flush=True)
+    improved = sum(1 for r in rows
+                   if r["cost_ilp"] < r["cost_greedy_default"] * (1 - 1e-9))
+    return {"time_budget_s": budget, "improved_programs": improved,
+            "rows": rows}
+
+
 def snap_loop_fusion(quick: bool) -> List[Dict]:
     from benchmarks.iterative import run_suite
     rows = run_suite(quick=quick)
@@ -218,6 +306,13 @@ SAVINGS_SLACK = 0.02
 # run's relative tolerance to the floor, CI machines being noisy).
 LOOP_SPEEDUP_FLOOR = 5.0
 LOOP_MIN_PROGRAMS = 3
+
+# ISSUE 9 acceptance floor: the ILP backend must keep a strict calibrated-
+# cost improvement over the default planner on at least this many paper
+# programs.  Absolute (no baseline, no tolerance): plan costs are priced by
+# a deterministic model, not measured wall clock, so they are machine-
+# independent — and the never-worse contract is exact by construction.
+ILP_MIN_IMPROVED = 3
 
 # ISSUE 7 acceptance ceiling: one disabled obs.trace.span() call must stay
 # under this many nanoseconds.  Absolute (no baseline, no tolerance): the
@@ -323,6 +418,26 @@ def compare_snapshots(snap: Dict, base: Dict, tolerance: float) -> List[str]:
             f"{floor:.1f}x flush-path speedup "
             f"(need {LOOP_MIN_PROGRAMS} at {LOOP_SPEEDUP_FLOOR:.0f}x"
             f"*(1-tol))")
+    # partition quality (ISSUE 9): deterministic model costs, gated
+    # absolutely on the fresh snapshot — ilp may never exceed either greedy
+    # baseline, and the strict-improvement floor must hold
+    pq = snap.get("partition_quality", {})
+    for r in pq.get("rows", []):
+        if r["cost_ilp"] > r["cost_greedy"] * (1 + 1e-9):
+            fails.append(
+                f"partition_quality/{r['program']}: ilp cost "
+                f"{r['cost_ilp']:.3e} > greedy(calibrated) "
+                f"{r['cost_greedy']:.3e} — anytime contract broken")
+        if r["cost_ilp"] > r["cost_greedy_default"] * (1 + 1e-9):
+            fails.append(
+                f"partition_quality/{r['program']}: ilp cost "
+                f"{r['cost_ilp']:.3e} > greedy(default) "
+                f"{r['cost_greedy_default']:.3e}")
+    if pq and pq.get("improved_programs", 0) < ILP_MIN_IMPROVED:
+        fails.append(
+            f"partition_quality: ilp strictly improves only "
+            f"{pq.get('improved_programs', 0)} programs "
+            f"(need {ILP_MIN_IMPROVED})")
     # observability: the disabled-tracing span cost is gated absolutely —
     # it depends only on the fresh snapshot (see OBS_SPAN_NS_CEILING)
     span_ns = snap.get("obs", {}).get("span_ns_disabled")
@@ -361,7 +476,7 @@ def compare_snapshots(snap: Dict, base: Dict, tolerance: float) -> List[str]:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default="BENCH_8.json",
+    ap.add_argument("--json", default="BENCH_9.json",
                     help="output path for the snapshot JSON")
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer device counts")
@@ -390,6 +505,7 @@ def main() -> None:
         "kernel_coverage": snap_kernel_coverage(),
         "comm_scaling": snap_comm_scaling(devices),
         "mixed_lowering": snap_mixed_lowering(),
+        "partition_quality": snap_partition_quality(args.quick),
         "loop_fusion": snap_loop_fusion(args.quick),
         "obs": snap_obs(),
         "serving": snap_serving(args.quick),

@@ -352,12 +352,17 @@ _BUILDERS = {"indexed": build_graph, "reference": build_graph_reference}
 _LOGGING_ALGORITHMS = {"linear", "greedy", "greedy_reference"}
 
 
+PARTITION_BACKENDS = ("greedy", "ilp")
+
+
 def partition(ops: Sequence[Op], algorithm: str = "greedy",
               cost_model="bohrium", node_budget: int = 100_000,
               graph: Optional[WSPGraph] = None,
               builder: str = "indexed",
               dense_weights: Optional[bool] = None,
-              merge_log: Optional[List[Dict]] = None) -> PartitionResult:
+              merge_log: Optional[List[Dict]] = None,
+              partition_backend: str = "greedy",
+              time_budget_s: Optional[float] = None) -> PartitionResult:
     """Front door: the graph + partition stages of the scheduler pipeline
     (tape → WSP graph → partition under a cost model).
 
@@ -366,11 +371,20 @@ def partition(ops: Sequence[Op], algorithm: str = "greedy",
     ``merge_log`` (the obs/explain hook) collects one dict per merge the
     WSP sweep considered — taken or rejected, with the priced saving — for
     the algorithms that decide merge-by-merge (linear/greedy/
-    greedy_reference); other algorithms leave it empty."""
+    greedy_reference); other algorithms leave it empty.
+
+    ``partition_backend='ilp'`` routes to the anytime branch-and-bound
+    solver (``partition_ilp``): the classic ``algorithm`` sweep becomes
+    the warm start / incumbent, ``time_budget_s`` caps the solve wall
+    clock, and the result is never costlier than greedy.  The default
+    ``'greedy'`` backend is the classic per-``algorithm`` path."""
     if isinstance(cost_model, str):
         cost_model = make_cost_model(cost_model)
     if builder not in _BUILDERS:
         raise ValueError(f"unknown builder {builder!r}; have {sorted(_BUILDERS)}")
+    if partition_backend not in PARTITION_BACKENDS:
+        raise ValueError(f"unknown partition_backend {partition_backend!r}; "
+                         f"have {sorted(PARTITION_BACKENDS)}")
     t0 = time.perf_counter()
     with trace.span("stage.graph", n_ops=len(ops), builder=builder):
         g = graph if graph is not None else _BUILDERS[builder](list(ops))
@@ -378,8 +392,14 @@ def partition(ops: Sequence[Op], algorithm: str = "greedy",
     state = PartitionState(g, cost_model, dense=dense_weights)
     stats: Dict[str, float] = {}
     t1 = time.perf_counter()
-    with trace.span("stage.partition", algorithm=algorithm) as sp:
-        if algorithm == "optimal":
+    with trace.span("stage.partition", algorithm=algorithm,
+                    backend=partition_backend) as sp:
+        if partition_backend == "ilp":
+            from .partition_ilp import ilp_partition
+            state = ilp_partition(state, time_budget_s=time_budget_s,
+                                  node_budget=node_budget, stats=stats,
+                                  merge_log=merge_log)
+        elif algorithm == "optimal":
             state = optimal(state, node_budget=node_budget, stats=stats)
             if stats.get("bb_exhausted_budget"):
                 # budget exhausted: the preconditioned incumbent may lose to

@@ -112,7 +112,8 @@ def _shard_digest(tape: Sequence[Op]) -> Tuple:
 
 def tape_signature(tape: Sequence[Op], algorithm: str, cost_model: str,
                    topology: Tuple = (), backends: Tuple = (),
-                   cost_token: Tuple = ()) -> Tuple:
+                   cost_token: Tuple = (),
+                   partition_backend: str = "greedy") -> Tuple:
     """Canonical merge-cache key.  ``topology`` is the executor's device/mesh
     identity (``dist.mesh.topology_key``): a partition computed under one
     device count must never be replayed under another once plans become
@@ -121,9 +122,14 @@ def tape_signature(tape: Sequence[Op], algorithm: str, cost_model: str,
     decisions, which are only valid for the stack that made them.
     ``cost_token`` is the cost model's extra identity beyond its name
     (``cost.model_cache_token``) — the ``calibrated`` model's prices move
-    with each installed fit, so its calibration epoch keys the cache too."""
+    with each installed fit, so its calibration epoch keys the cache too.
+    ``partition_backend`` (greedy vs ilp solver) is appended LAST: the
+    plan store's envelope reads ``key[2]`` positionally for its
+    epoch-sensitivity flag, so new key components must never shift the
+    prefix."""
     return (algorithm, cost_model, tuple(cost_token), tuple(topology),
-            tuple(backends), _shard_digest(tape), block_signature(tape))
+            tuple(backends), _shard_digest(tape), block_signature(tape),
+            partition_backend)
 
 
 def tapes_structurally_equal(a: Sequence[Op], b: Sequence[Op]) -> bool:

@@ -29,7 +29,27 @@ KERNEL_LAUNCH_S = 2e-6    # per-dispatch overhead (XLA executable launch)
 # fabric bytes).  Persisted profiles (tuning.profile) embed it; bump it
 # whenever pricing features change meaning, and every stale profile on disk
 # is refused instead of silently miscalibrating a fit.
-COST_REGISTRY_VERSION = 5
+COST_REGISTRY_VERSION = 6
+
+
+def gather_table_bytes(b: BlockInfo) -> int:
+    """Unique gathered-table bytes of a block (deduplicated on view key).
+
+    A ``gather``'s table is read at RANDOM offsets — on TPU that load can't
+    stream at sequential HBM bandwidth, and the Pallas lowering keeps the
+    whole table VMEM-resident per grid step — so the ``tpu*`` family prices
+    each unique table view one extra HBM trip on top of the ordinary ext
+    term.  Constant per-view price, dedup-only under merges → monotone."""
+    seen = set()
+    total = 0
+    for op in b.ops:
+        if op.opcode == "gather" and op.inputs \
+                and isinstance(op.inputs[0], View):
+            k = view_key(op.inputs[0])
+            if k not in seen:
+                seen.add(k)
+                total += op.inputs[0].nbytes
+    return total
 
 
 class CostModel:
@@ -294,7 +314,7 @@ class TPUCost(_KernelAlignment, CostModel):
     def block_cost(self, b: BlockInfo) -> float:
         if all(o.is_system() for o in b.ops):
             return 0.0   # DEL/SYNC-only blocks dispatch nothing
-        return (b.ext_size("bytes") / self.hbm_bw
+        return ((b.ext_size("bytes") + gather_table_bytes(b)) / self.hbm_bw
                 + self.launch_s * self._dispatches(b))
 
 
@@ -344,7 +364,7 @@ class TPUDistCost(_KernelAlignment, CostModel):
         if all(o.is_system() for o in b.ops):
             return 0.0
         reads, writes = b.ext_views()
-        hbm = sum(v.nbytes for v in (*reads, *writes))
+        hbm = sum(v.nbytes for v in (*reads, *writes)) + gather_table_bytes(b)
         ici = sum(self.halo_bytes(v) for v in (*reads, *writes))
         return (hbm / self.hbm_bw + ici / self.ici_bw
                 + self.launch_s * self._dispatches(b))

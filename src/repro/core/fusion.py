@@ -23,10 +23,13 @@ from typing import Dict, List, Set, Tuple
 from .ir import COMM_OPS, ELEMENTWISE, REDUCTIONS, Op, View
 
 # opcodes that are data-parallel over a regular iteration domain and may share
-# a fused kernel with other such ops (reductions fuse on their sweep domain).
-FUSIBLE_OPCODES = set(ELEMENTWISE) | REDUCTIONS | {"random", "range"} | COMM_OPS
+# a fused kernel with other such ops (reductions fuse on their sweep domain;
+# gather is data-parallel over its OUTPUT domain — each output element reads
+# one table element through the index operand).
+FUSIBLE_OPCODES = (set(ELEMENTWISE) | REDUCTIONS
+                   | {"random", "range", "gather"} | COMM_OPS)
 # opcodes that never share a block with a non-system op (irregular access).
-OPAQUE_OPCODES = {"matmul", "gather"}
+OPAQUE_OPCODES = {"matmul"}
 
 
 def data_parallel(op: Op) -> bool:
@@ -61,6 +64,19 @@ def fusible(f: Op, g: Op) -> bool:
         return True
     if f.opcode in OPAQUE_OPCODES or g.opcode in OPAQUE_OPCODES:
         return False
+    # gather legality: the fused kernel keeps the gather's TABLE (its data
+    # input, inputs[0]) whole-array resident per grid step — it cannot be
+    # tiled by the output domain, so a value written to the table inside
+    # the block would race the gather's random reads.  A gather therefore
+    # never fuses with an op that writes any view overlapping its table
+    # (even an identical view, which Def. 12 alone would allow); readers
+    # of the table and gather×gather pairs stay fusible.
+    for a, b in ((f, g), (g, f)):
+        if a.opcode == "gather" and isinstance(a.inputs[0], View):
+            tv = a.inputs[0]
+            for o in b.out_views():
+                if tv.overlaps(o):
+                    return False
     # COMM boundary (core/dist): a collective never shares a kernel with
     # compute — it marks a placement change the executor must realize at a
     # block edge.  COMM ops DO fuse with each other (identical reshards of

@@ -113,12 +113,20 @@ class Runtime:
                  donate="auto", mesh=None, history_limit: int = 1024,
                  profiler=None, loop_fusion: bool = True,
                  loop_threshold: int = 3, loop_unroll: int = 32,
-                 plan_store=None, _scheduler: Optional[Scheduler] = None,
+                 plan_store=None, partition_backend: str = "greedy",
+                 time_budget_s: Optional[float] = None,
+                 _scheduler: Optional[Scheduler] = None,
                  _executor: Optional[BlockExecutor] = None):
         self.algorithm = algorithm
         self.cost_model = cost_model
         self.use_cache = use_cache
         self.node_budget = node_budget
+        #: ``"greedy"`` = classic per-``algorithm`` sweep; ``"ilp"`` = the
+        #: anytime branch-and-bound solver warm-started from greedy
+        #: (``repro.core.partition_ilp``), never costlier than greedy
+        self.partition_backend = partition_backend
+        #: wall-clock cap for the ilp solver (None = node budget only)
+        self.time_budget_s = time_budget_s
         self.tape: List[Op] = []
         self.buffers: Dict[int, jnp.ndarray] = {}
         # sessions share their parent's planning/execution state (the
@@ -262,7 +270,9 @@ class Runtime:
                     node_budget=self.node_budget,
                     use_cache=self.use_cache,
                     topology=topo_fn() if topo_fn else (),
-                    lowering=self.executor.lowering_policy())
+                    lowering=self.executor.lowering_policy(),
+                    partition_backend=self.partition_backend,
+                    time_budget_s=self.time_budget_s)
                 if sched.result is not None:
                     self.last_partition = sched.result
                     entry = {"cost": sched.result.cost, "n_ops": len(tape),
@@ -320,6 +330,8 @@ class Runtime:
         kw.setdefault("cost_model", self.cost_model)
         kw.setdefault("use_cache", self.use_cache)
         kw.setdefault("node_budget", self.node_budget)
+        kw.setdefault("partition_backend", self.partition_backend)
+        kw.setdefault("time_budget_s", self.time_budget_s)
         return Runtime(loop_fusion=loop_fusion,
                        _scheduler=self.scheduler, _executor=self.executor,
                        **kw)
@@ -699,6 +711,26 @@ def matmul(a: LazyArray, b: LazyArray) -> LazyArray:
     assert a.ndim == 2 and b.ndim == 2
     out = _alloc(a.rt, (a.shape[0], b.shape[1]), a.dtype)
     a.rt.record(Op("matmul", out.view, (a.view, b.view)))
+    return out
+
+
+def take(a: LazyArray, idx, axis: int = 0) -> LazyArray:
+    """Gather ``a``'s elements at ``idx`` along ``axis`` (NumPy ``take``).
+
+    Records a ``gather`` op: ``out[i...] = a[..., idx[i...], ...]``.  The
+    output has ``idx``'s shape along the indexed axis; for 1-D ``a`` the
+    output shape IS ``idx.shape``.  Indices are float-carried on the tape
+    (the runtime is float-typed) and truncated to int at execution; the
+    gather fuses with elementwise producers/consumers of its output and
+    index — only writers of the gathered table are fusion barriers
+    (``fusion.fusible``)."""
+    idx = asarray(idx) if not isinstance(idx, LazyArray) else idx
+    if axis < 0:
+        axis += a.ndim
+    assert 0 <= axis < a.ndim, f"axis {axis} out of range for ndim {a.ndim}"
+    shape = a.shape[:axis] + idx.shape + a.shape[axis + 1:]
+    out = _alloc(a.rt, shape, a.dtype)
+    a.rt.record(Op("gather", out.view, (a.view, idx.view), axis=axis))
     return out
 
 

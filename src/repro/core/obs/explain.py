@@ -89,6 +89,10 @@ class ExplainReport:
     blocks: List[BlockReport] = field(default_factory=list)
     cache: Dict[str, Any] = field(default_factory=dict)
     loop: List[Dict[str, Any]] = field(default_factory=list)
+    partition_backend: str = "greedy"
+    #: ilp backend only — status (optimal/anytime/budget-hit), objective,
+    #: lower bound, optimality gap, warm-start greedy cost, nodes, wall
+    solver: Dict[str, Any] = field(default_factory=dict)
 
     # -- machine-readable ----------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -96,10 +100,12 @@ class ExplainReport:
             "schema": "repro_explain_v1",
             "algorithm": self.algorithm,
             "cost_model": self.cost_model,
+            "partition_backend": self.partition_backend,
             "backends": list(self.backends),
             "n_ops": self.n_ops,
             "n_blocks": self.n_blocks,
             "cost": self.cost,
+            "solver": self.solver,
             "merges": [asdict(m) for m in self.merges],
             "blocks": [asdict(b) for b in self.blocks],
             "cache": self.cache,
@@ -123,6 +129,17 @@ class ExplainReport:
                  f"(algorithm={self.algorithm}, cost_model={self.cost_model},"
                  f" cost={self.cost:.0f})")
         L.append(f"backends: {', '.join(self.backends)}")
+        if self.partition_backend != "greedy" or self.solver:
+            L.append(f"partition backend: {self.partition_backend}")
+        if self.solver:
+            s = self.solver
+            L.append(f"  solver: {s.get('status', '?')}  "
+                     f"objective={s.get('objective', float('nan')):.6g}  "
+                     f"bound={s.get('bound', float('nan')):.6g}  "
+                     f"gap={s.get('gap', float('nan')):.2%}  "
+                     f"(greedy={s.get('greedy_cost', float('nan')):.6g}, "
+                     f"{s.get('nodes', 0)} nodes, "
+                     f"{s.get('wall_s', 0.0):.3f}s)")
 
         taken, rejected = self.taken_merges(), self.rejected_merges()
         L.append("")
@@ -210,10 +227,24 @@ def explain(rt, tape: Optional[Sequence] = None) -> ExplainReport:
     tape = list(tape)
 
     raw_log: List[Dict[str, Any]] = []
+    pbackend = getattr(rt, "partition_backend", "greedy")
     result = partition(tape, algorithm=rt.algorithm,
                        cost_model=rt.cost_model,
-                       node_budget=rt.node_budget, merge_log=raw_log)
+                       node_budget=rt.node_budget, merge_log=raw_log,
+                       partition_backend=pbackend,
+                       time_budget_s=getattr(rt, "time_budget_s", None))
     merge_log = [MergeEvent(**d) for d in raw_log]
+    solver: Dict[str, Any] = {}
+    if pbackend == "ilp":
+        st = result.stats
+        solver = {"status": st.get("ilp_status"),
+                  "objective": st.get("ilp_objective"),
+                  "bound": st.get("ilp_bound"),
+                  "gap": st.get("ilp_gap"),
+                  "greedy_cost": st.get("greedy_cost"),
+                  "nodes": st.get("ilp_nodes"),
+                  "edges": st.get("ilp_edges"),
+                  "wall_s": st.get("ilp_wall_s")}
     blocks = result.op_blocks()
     plans = plan_blocks(tape, blocks)
 
@@ -267,7 +298,8 @@ def explain(rt, tape: Optional[Sequence] = None) -> ExplainReport:
     key = tape_signature(tape, rt.algorithm, rt.cost_model,
                          topology=topo_fn() if topo_fn else (),
                          backends=policy.key(),
-                         cost_token=model_cache_token(rt.cost_model))
+                         cost_token=model_cache_token(rt.cost_model),
+                         partition_backend=pbackend)
     cache = {"key_digest": signature_digest(key),
              "resident": key in rt.cache,
              "hits": rt.cache.hits, "misses": rt.cache.misses,
@@ -281,4 +313,4 @@ def explain(rt, tape: Optional[Sequence] = None) -> ExplainReport:
         backends=tuple(policy.backends),
         n_ops=len(tape), n_blocks=result.n_blocks, cost=result.cost,
         merges=merge_log, blocks=block_reports, cache=cache,
-        loop=loop_events)
+        loop=loop_events, partition_backend=pbackend, solver=solver)

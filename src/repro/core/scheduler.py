@@ -163,7 +163,9 @@ class Scheduler:
     def plan(self, tape: Sequence[Op], *, algorithm: str = "greedy",
              cost_model: str = "bohrium", node_budget: int = 100_000,
              use_cache: bool = True, topology: Tuple = (),
-             lowering: Optional[LoweringPolicy] = None) -> Schedule:
+             lowering: Optional[LoweringPolicy] = None,
+             partition_backend: str = "greedy",
+             time_budget_s: Optional[float] = None) -> Schedule:
         """Stages 2–5: turn a recorded tape into an executable ``Schedule``.
 
         Builds the WSP graph, partitions it under ``cost_model`` with
@@ -177,7 +179,13 @@ class Scheduler:
         merge-cache hit both the partition AND the lowering decisions are
         replayed — steady-state flushes skip partitioning and backend
         probing alike (``Schedule.result`` is ``None`` on a hit).
-        ``Schedule.stats`` carries per-stage timings."""
+        ``Schedule.stats`` carries per-stage timings.
+
+        ``partition_backend='ilp'`` solves the partition as an anytime
+        integer program warm-started from greedy (``algorithms.partition``;
+        ``time_budget_s`` caps the solver wall clock).  The backend is part
+        of the merge-cache / plan-store key: a store populated by greedy is
+        a clean miss for ilp and vice versa."""
         stats: Dict[str, float] = {}
         blocks: Optional[Tuple[Tuple[int, ...], ...]] = None
         decisions: Optional[Tuple] = None
@@ -187,7 +195,8 @@ class Scheduler:
             key = tape_signature(tape, algorithm, cost_model,
                                  topology=topology,
                                  backends=lowering.key() if lowering else (),
-                                 cost_token=model_cache_token(cost_model))
+                                 cost_token=model_cache_token(cost_model),
+                                 partition_backend=partition_backend)
             entry = self.cache.get(key)
             trace.instant("cache.merge", hit=entry is not None)
             if entry is None and self.plan_store is not None:
@@ -202,7 +211,9 @@ class Scheduler:
         if blocks is None:
             result = partition(tape, algorithm=algorithm,
                                cost_model=cost_model,
-                               node_budget=node_budget)
+                               node_budget=node_budget,
+                               partition_backend=partition_backend,
+                               time_budget_s=time_budget_s)
             blocks = tuple(tuple(b) for b in result.op_blocks())
             stats.update(result.stats)
         t0 = time.perf_counter()

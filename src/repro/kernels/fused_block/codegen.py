@@ -30,7 +30,15 @@ to a 2-D ``(R, C)`` space — ``C`` is the innermost domain axis (lanes),
 * **``range`` / ``random`` ops**: ``range`` becomes an in-kernel iota over
   the global flat index; ``random`` values are drawn in an XLA prologue
   with the exact ``fold_in(PRNGKey(seed), salt)`` scheme of the fallback
-  path, so results stay bit-identical and partition-invariant.
+  path, so results stay bit-identical and partition-invariant;
+* **``gather`` ops** (1-D whole-base table, axis 0, index-shaped output):
+  the table streams in as a ``"table"`` operand — a constant-index-map
+  block holding the WHOLE table, revisited by every grid step and counted
+  at full size in the VMEM budget — and the kernel computes
+  ``jnp.take(table, idx.astype(int32), axis=0)``, the exact expression of
+  the XLA fallback, so the in-kernel index load stays bit-identical.
+  Other gather forms (multi-axis tables, partial table views) raise the
+  ``gather_form`` slug.
 
 ``FusedBlockUnsupported`` is now reserved for the truly inexpressible
 cases; each raise carries a machine-readable ``reason`` slug (see
@@ -76,9 +84,10 @@ REASONS = (
     "system_only",      # no work ops — nothing to compile
     "empty_domain",     # zero-size iteration domain
     "comm",             # COMM op: a placement change, never a compute kernel
-    "opcode",           # opaque opcode (matmul, gather, unknown)
+    "opcode",           # opaque opcode (matmul, unknown)
     "mixed_domain",     # work ops disagree on the iteration domain
-    "irregular_view",   # view is not whole-base / slice-plannable (gather)
+    "irregular_view",   # view is not whole-base / slice-plannable
+    "gather_form",      # gather not in the supported 1-D axis-0 whole-table form
     "reduction_axis",   # reduction axis not full/leading/trailing
     "reduction_out",    # reduction output is not a whole contiguous base
     "view_conflict",    # in-block read overlaps a non-identical prior write
@@ -111,7 +120,7 @@ class _Operand:
     """One kernel input stream."""
 
     key: Tuple
-    kind: str                 # "dense" | "row" | "col" | "scalar"
+    kind: str                 # "dense" | "row" | "col" | "scalar" | "table"
     source: str               # "buffer" | "zeros" | "random"
     base_uid: int = -1
     core: Optional[View] = None      # view materialized outside the kernel
@@ -214,14 +223,36 @@ def _analyze(ops: Sequence[Op]) -> _Plan:
         if oc in COMM_OPS:
             raise FusedBlockUnsupported("comm", oc)
         if (oc not in _UNARY and oc not in _BINARY and oc not in REDUCTIONS
-                and oc not in ("where", "random", "range")):
+                and oc not in ("where", "random", "range", "gather")):
             raise FusedBlockUnsupported("opcode", oc)
     domain = work[0].domain
     for op in work:
         if op.domain != domain:
             raise FusedBlockUnsupported(
                 "mixed_domain", f"{op.domain} vs {domain}")
-        for v in op.in_views():
+        ivs = op.in_views()
+        if op.opcode == "gather":
+            # supported form: 1-D whole-base table, axis 0 (or None), output
+            # shaped like the index — each output element loads exactly one
+            # table element, so the iteration domain is the INDEX view and
+            # the table streams in whole (constant-index-map block).  The
+            # table view is therefore exempt from the domain-shape check.
+            tv = op.inputs[0] if op.inputs else None
+            iv = op.inputs[1] if len(op.inputs) > 1 else None
+            axis = op.axis
+            if not isinstance(tv, View) or not isinstance(iv, View):
+                raise FusedBlockUnsupported("gather_form", "literal operand")
+            if axis not in (0, None) or len(tv.shape) != 1:
+                raise FusedBlockUnsupported(
+                    "gather_form", f"axis={axis} table={tv.shape}")
+            if not _whole(tv):
+                raise FusedBlockUnsupported(
+                    "gather_form", f"partial table view {tv!r}")
+            if op.out.shape != iv.shape:
+                raise FusedBlockUnsupported(
+                    "gather_form", f"out {op.out.shape} vs idx {iv.shape}")
+            ivs = tuple(v for v in ivs if v is not tv)
+        for v in ivs:
             if v.shape != domain:       # frontend broadcasts; hand tapes may not
                 raise FusedBlockUnsupported(
                     "mixed_domain", f"input {v.shape} vs domain {domain}")
@@ -267,6 +298,21 @@ def _analyze(ops: Sequence[Op]) -> _Plan:
             op_index[key] = idx
         return idx
 
+    def table_operand_for(v: View) -> int:
+        # the gather's table: streamed WHOLE into every grid step (constant
+        # index map) — never tiled by the domain, so it bypasses _classify.
+        # Fusion legality guarantees no in-block write overlaps it.
+        key = ("table", v.base.uid, v.offset, v.shape, v.strides)
+        idx = op_index.get(key)
+        if idx is None:
+            idx = len(plan.operands)
+            source = "buffer" if v.base.uid in input_set else "zeros"
+            plan.operands.append(_Operand(
+                key=key, kind="table", source=source, base_uid=v.base.uid,
+                core=v))
+            op_index[key] = idx
+        return idx
+
     def resolve_read(v: View) -> Tuple:
         u = v.base.uid
         for wview, nidx, is_red in reversed(writes.get(u, [])):
@@ -294,6 +340,9 @@ def _analyze(ops: Sequence[Op]) -> _Plan:
             terms = ()
         elif oc in REDUCTIONS:
             terms = (resolve_read(op.in_views()[0]),)
+        elif oc == "gather":
+            terms = (("op", table_operand_for(op.inputs[0])),
+                     resolve_read(op.inputs[1]))
         else:
             # literals pass through unconverted: make_block_fn feeds the raw
             # Python scalar to jnp, so coercing (e.g. int -> float) here
@@ -374,6 +423,9 @@ def _analyze(ops: Sequence[Op]) -> _Plan:
     def step_bytes(tr: int) -> int:
         units = 0.0
         for o in plan.operands:
+            if o.kind == "table":       # whole table resident per grid step
+                units += o.core.size
+                continue
             units += {"dense": tr * C, "row": C, "col": tr, "scalar": 1}[o.kind]
         for s in plan.slots:
             units += {"dense": tr * C, "window": tr * C, "red_full": 1,
@@ -437,12 +489,18 @@ def build_block_kernel(ops: Sequence[Op], *, seed: int = 0,
 
     in_specs, out_specs, out_shapes = [], [], []
     for o in p.operands:
-        shape, idx = {
-            "dense": ((TR, C), lambda i: (i, 0)),
-            "row": ((1, C), lambda i: (0, 0)),
-            "col": ((TR, 1), lambda i: (i, 0)),
-            "scalar": ((1, 1), lambda i: (0, 0)),
-        }[o.kind]
+        if o.kind == "table":
+            # the whole table in one constant-index-map block: every grid
+            # step sees the full array (full VMEM residency, priced by the
+            # budget check above and the cost models' gather term)
+            shape, idx = (1, o.core.size), lambda i: (0, 0)
+        else:
+            shape, idx = {
+                "dense": ((TR, C), lambda i: (i, 0)),
+                "row": ((1, C), lambda i: (0, 0)),
+                "col": ((TR, 1), lambda i: (i, 0)),
+                "scalar": ((1, 1), lambda i: (0, 0)),
+            }[o.kind]
         in_specs.append(pl.BlockSpec(shape, idx))
     for s in p.slots:
         shape, idx, full = {
@@ -512,6 +570,13 @@ def build_block_kernel(ops: Sequence[Op], *, seed: int = 0,
                 rows = jax.lax.broadcasted_iota(jnp.int32, (TR, C), 0)
                 cols = jax.lax.broadcasted_iota(jnp.int32, (TR, C), 1)
                 val = (i * TR + rows) * C + cols
+            elif oc == "gather":
+                # same expression as the XLA fallback (executor.make_block_fn)
+                # so the in-kernel index load stays bit-identical; padded
+                # index lanes read table[0] harmlessly (epilogue keeps [:N])
+                tbl = args[0].reshape(-1)
+                idxs = jnp.broadcast_to(args[1], (TR, C)).astype(jnp.int32)
+                val = jnp.take(tbl, idxs, axis=0)
             elif oc == "random":
                 val = args[0]
             elif oc in _UNARY:
@@ -539,6 +604,8 @@ def build_block_kernel(ops: Sequence[Op], *, seed: int = 0,
             # analysis checked _plannable(core), so _read never takes its
             # gather branch here — whole-base reshape or reshape+slice only
             core = _read(store[o.base_uid], o.core)
+        if o.kind == "table":
+            return core.reshape(1, -1)
         if o.kind == "scalar":
             return core.reshape(1, 1)
         if o.kind == "row":

@@ -4,8 +4,10 @@ A :class:`TapeProgram` is a deterministic function of its seed: the same
 seed always performs the same sequence of lazy-array actions — elementwise
 chains, axis/full reductions, strided and partial views, RMW partial
 writes, scalar/row/column broadcasts, transposes, opaque matmuls, explicit
-DELs, quantized ``random`` draws and (``sharded=True``) placement
-annotations that make the flush insert COMM collectives.  Replaying one
+DELs, quantized ``random`` draws, indexed ``gather``/``take`` reads (the
+index array is itself a computed integer-valued program array) and
+(``sharded=True``) placement annotations that make the flush insert COMM
+collectives.  Replaying one
 program under different runtime configurations is therefore a *differential
 test*: every configuration must produce bitwise-identical results.
 
@@ -136,7 +138,7 @@ class TapeProgram:
                 else bh.tanh(a * 0.125) * 8.0
 
         for _ in range(self.n_actions):
-            act = rnd.randrange(14)
+            act = rnd.randrange(15)
             ent = pick()
             if ent is None:
                 fresh("1d")
@@ -248,6 +250,15 @@ class TapeProgram:
                         pool.append((reshard(src[0], spec), src[1], True))
                     else:
                         pool.append((reshard(src[0], None), src[1], True))
+            elif act == 14:                    # gather / take (indexed read)
+                # table = a 1-D program array; indices = another program
+                # array floored into [0, n) — selecting integer-valued
+                # dyadics is exact, so gathers stay bitwise
+                # partition-invariant like every other action
+                tbl = pick("1d")
+                if tbl is not None:
+                    idx = bh.floor(bh.absolute(a) % float(n))
+                    pool.append((bh.take(tbl[0], idx), kind, True))
             # other act values on mismatched kinds: no-op (keeps the action
             # stream aligned across replays regardless of branch outcomes)
 

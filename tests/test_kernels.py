@@ -159,7 +159,8 @@ def test_fused_block_integer_dtypes(n, dtype):
 def test_fused_block_fallback_boundary_is_pinned():
     """fused_block_fn must fall back to the XLA path exactly for the blocks
     the codegen cannot express — and the fallback must stay correct.  After
-    ISSUE 3, strided views and reductions LOWER; gathers do not."""
+    ISSUE 3, strided views and reductions LOWER; after ISSUE 9, so do 1-D
+    axis-0 whole-table gathers (other gather forms keep a pinned slug)."""
     from repro.kernels.fused_block.ops import fused_block_fn
     salts = jnp.zeros((0,), jnp.int32)
     n = 100                                   # not a multiple of the tile
@@ -187,17 +188,28 @@ def test_fused_block_fallback_boundary_is_pinned():
     (got,) = fn(buf, salts)
     np.testing.assert_allclose(float(np.asarray(got).reshape(())),
                                float(np.sum(np.arange(n))), rtol=1e-6)
-    # gather opcode -> fallback with a machine-readable reason
+    # 1-D axis-0 whole-table gather -> now the Pallas path (ISSUE 9): the
+    # table streams in whole via a constant-index-map block and the kernel
+    # computes the exact jnp.take of the fallback
     idx = BaseArray(4, np.dtype(np.float32))
     g = BaseArray(4, np.dtype(np.float32))
     ops = [Op("gather", View.contiguous(g, (4,)),
               (View.contiguous(a, (n,)), View.contiguous(idx, (4,))),
               axis=0, new_bases=frozenset({g}))]
     fn, ins, outs, reason = fused_block_fn(ops)
-    assert reason == "opcode"
+    assert reason is None
     got = fn(buf, jnp.asarray([0., 3., 7., 11.], jnp.float32), salts)
     np.testing.assert_array_equal(np.asarray(got[0]),
                                   np.asarray(buf)[[0, 3, 7, 11]])
+    # unsupported gather form (partial table view) -> pinned slug
+    ops = [Op("gather", View.contiguous(g, (4,)),
+              (View(a, 8, (n // 2,), (1,)), View.contiguous(idx, (4,))),
+              axis=0, new_bases=frozenset({g}))]
+    fn, ins, outs, reason = fused_block_fn(ops)
+    assert reason == "gather_form"
+    got = fn(buf, jnp.asarray([0., 3., 7., 11.], jnp.float32), salts)
+    np.testing.assert_array_equal(np.asarray(got[0]),
+                                  np.asarray(buf)[8:][[0, 3, 7, 11]])
 
 
 # ---------------------------------------------------------------------------

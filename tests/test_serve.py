@@ -357,6 +357,36 @@ class TestPlanStore:
         # the bad entry was re-planned and re-persisted
         assert _counter(rt, "cache.plan_store.write") >= 1
 
+    def test_partition_backend_is_a_distinct_store_identity(self, tmp_path):
+        """Fault-matrix sibling for ISSUE 9: a store populated by the
+        greedy backend must be a clean (counted) miss for an ilp runtime
+        — the backend is part of the plan key, so neither run can ever
+        be served the other's blocks — and the greedy entry must survive
+        untouched for later greedy warm starts."""
+        store_dir = str(tmp_path)
+        ref = self._populate(store_dir)        # greedy populates the store
+        n_greedy = len(os.listdir(store_dir))
+        rt = Runtime(plan_store=store_dir, loop_fusion=False,
+                     partition_backend="ilp")
+        with rt.activate():
+            got = _warm_program()
+        assert np.array_equal(ref, got)
+        assert _counter(rt, "cache.plan_store.hit") == 0
+        assert _counter(rt, "cache.plan_store.miss") >= 1
+        # the ilp plan was persisted under its own key, not over greedy's
+        assert _counter(rt, "cache.plan_store.write") >= 1
+        assert len(os.listdir(store_dir)) > n_greedy
+        rt2, got2 = self._reload(store_dir)    # greedy still warm-starts
+        assert np.array_equal(ref, got2)
+        assert _counter(rt2, "cache.plan_store.hit") >= 1
+        # and the ilp runtime now warm-starts off its own entry too
+        rt3 = Runtime(plan_store=store_dir, loop_fusion=False,
+                      partition_backend="ilp")
+        with rt3.activate():
+            got3 = _warm_program()
+        assert np.array_equal(ref, got3)
+        assert _counter(rt3, "cache.plan_store.hit") >= 1
+
     def test_crash_during_write_leaves_old_entry_readable(self, tmp_path,
                                                           monkeypatch):
         store_dir = str(tmp_path)

@@ -57,7 +57,7 @@ def test_grammar_coverage():
                         or v.size != v.base.size:
                     strided_reads += 1
     assert ops & REDUCTIONS
-    assert {"add", "mul", "where", "floor", "random"} <= ops
+    assert {"add", "mul", "where", "floor", "random", "gather"} <= ops
     assert partial_writes > 0 and strided_reads > 0 and bcast > 0
 
 
