@@ -1,11 +1,16 @@
 """Canonical perf snapshot — one JSON artifact per commit (ISSUE 4), plus
 the CI perf-regression gate (ISSUE 5), the cross-flush loop-fusion speedup
-gate (ISSUE 6), the serving-runtime gate (ISSUE 8) and the ILP
-partition-quality gate (ISSUE 9).
+gate (ISSUE 6), the serving-runtime gate (ISSUE 8), the ILP
+partition-quality gate (ISSUE 9) and the LM serving gate (ISSUE 10).
 
-    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_9.json [--quick]
-    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_9.json \\
-        --compare BENCH_9.json --tolerance 0.25      # gate vs the baseline
+    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_10.json [--quick]
+    PYTHONPATH=src python benchmarks/run_all.py --json BENCH_10.json \\
+        --compare BENCH_10.json --tolerance 0.25     # gate vs the baseline
+
+The repo keeps ONE committed snapshot — the latest (``BENCH_<n>.json``
+with the highest issue number); superseded snapshots are deleted when the
+next one lands, and history lives in git + the per-commit CI artifacts
+(DESIGN.md §20).
 
 ``--compare`` loads a baseline snapshot (BEFORE overwriting ``--json``) and
 fails the run when any gated metric regresses past ``--tolerance``:
@@ -34,7 +39,12 @@ fails the run when any gated metric regresses past ``--tolerance``:
   hit the disk plan store at least once with zero corrupt/stale entries
   (absolute), p99 submit latency must stay under
   ``serving.TAIL_RATIO_CEILING`` x p50 (absolute), and QPS may not drop
-  below the machine-normalized ``base*(1-tol)``.
+  below the machine-normalized ``base*(1-tol)``;
+* lm: lazy-runtime transformer logits must stay bit-identical to the
+  jitted direct model at every prefill/decode step and the rmsnorm /
+  flash-attention kernel claimants must each claim >= 1 block (absolute);
+  lazy per-token decode latency may not exceed the machine-normalized
+  ``base*(1+tol)`` plus ``LM_TIME_SLACK_MS``.
 
 Aggregates the three benchmark families that gate this repo into a single
 machine-readable snapshot, seeding the bench trajectory (CI runs this and
@@ -58,6 +68,10 @@ the trend):
 * ``loop_fusion``       — iterative-suite per-iteration wall-clock,
   loop-fused vs per-flush, with the bitwise-identity check (ISSUE 6
   metric; see ``benchmarks.iterative`` for the two reported times);
+* ``lm``                — transformer prefill wall + per-token decode
+  latency, lazy runtime (``backend="lm"`` claimant stack) vs the jitted
+  direct model, with the bitwise check and per-backend claim counts
+  (ISSUE 10 metric);
 * ``obs``               — disabled-tracing span overhead (ns/call) and the
   span-count profile of one canonical traced flush (ISSUE 7 metric);
 * ``serving``           — multi-tenant Server QPS + p50/p99 under mixed
@@ -278,6 +292,93 @@ def snap_partition_quality(quick: bool) -> Dict:
             "rows": rows}
 
 
+def snap_lm(quick: bool) -> Dict:
+    """ISSUE 10 metric: LM serving through the lazy runtime vs the jitted
+    direct model — per-token decode latency and prefill wall, with the
+    bitwise-identity check and the kernel-claimant block counts.
+
+    The latency ratio is *diagnostic* (the lazy path pays tracing +
+    planning per step and runs its claimed kernels in Pallas interpret
+    mode on CPU); what the ``--compare`` gate holds absolute is the
+    contract: bit-identical logits at every step, and the rmsnorm /
+    flash-attention claimants actually claiming blocks.  Lazy decode
+    latency is additionally gated against the machine-normalized
+    baseline."""
+    import jax
+    import numpy as np
+
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    from repro.models.lazy_transformer import LazyTransformer
+
+    cfg = ModelConfig(name="bench_lm", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=256, dtype="float32",
+                      param_dtype="float32", norm_plus_one=True,
+                      tie_embeddings=False)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(7)
+    b, s, max_seq = 2, 16, 48
+    steps = 4 if quick else 12
+    tokens = rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)
+    step_toks = [rng.integers(0, cfg.vocab_size, (b, 1)).astype(np.int32)
+                 for _ in range(steps)]
+
+    # -- direct jitted serving (the reference: timing AND bits) ----------
+    prefill = jax.jit(lambda p, t: T.serve_prefill(p, t, cfg, max_seq))
+    decode = jax.jit(lambda p, c, t: T.serve_decode(p, c, t, cfg))
+    ref_logits, caches0 = prefill(params, tokens)           # compile
+    jax.block_until_ready(ref_logits)
+    t0 = time.perf_counter()
+    ref_logits, caches0 = prefill(params, tokens)
+    jax.block_until_ready(ref_logits)
+    prefill_ms_direct = (time.perf_counter() - t0) * 1e3
+    jax.block_until_ready(decode(params, caches0, step_toks[0]))  # compile
+    ref_steps, t_direct, caches = [], [], caches0
+    for tok in step_toks:
+        t0 = time.perf_counter()
+        lg, caches = decode(params, caches, tok)
+        jax.block_until_ready(lg)
+        t_direct.append((time.perf_counter() - t0) * 1e3)
+        ref_steps.append(np.asarray(lg))
+
+    # -- lazy runtime: one flushed tape per prefill/decode step ----------
+    lt = LazyTransformer(params, cfg)
+    lt.prefill(tokens, max_seq)                 # warm merge/executable caches
+    t0 = time.perf_counter()
+    got_logits = lt.prefill(tokens, max_seq)
+    prefill_ms_lazy = (time.perf_counter() - t0) * 1e3
+    identical = np.asarray(ref_logits).tobytes() == got_logits.tobytes()
+    t_lazy = []
+    for i, tok in enumerate(step_toks):
+        t0 = time.perf_counter()
+        lg = lt.decode(tok)
+        t_lazy.append((time.perf_counter() - t0) * 1e3)
+        identical = identical and ref_steps[i].tobytes() == lg.tobytes()
+    claims = dict(lt.rt.executor.stats["backend_blocks"])
+
+    def med(xs: List[float]) -> float:
+        return float(sorted(xs)[len(xs) // 2])
+
+    out = {"config": {"n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                      "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+                      "batch": b, "prompt": s, "max_seq": max_seq},
+           "steps": steps, "bit_identical": bool(identical),
+           "prefill_ms_direct": prefill_ms_direct,
+           "prefill_ms_lazy": prefill_ms_lazy,
+           "decode_ms_direct": med(t_direct),
+           "decode_ms_lazy": med(t_lazy),
+           "backend_blocks": claims}
+    print(f"lm: prefill {prefill_ms_lazy:.1f}ms lazy vs "
+          f"{prefill_ms_direct:.1f}ms direct; decode "
+          f"{out['decode_ms_lazy']:.1f}ms vs "
+          f"{out['decode_ms_direct']:.1f}ms/token; "
+          f"claimed rmsnorm={claims.get('rmsnorm', 0)} "
+          f"flash_attention={claims.get('flash_attention', 0)}, "
+          f"identical={identical}", flush=True)
+    return out
+
+
 def snap_loop_fusion(quick: bool) -> List[Dict]:
     from benchmarks.iterative import run_suite
     rows = run_suite(quick=quick)
@@ -319,6 +420,11 @@ ILP_MIN_IMPROVED = 3
 # disabled fast path is one global load + `is None` test by construction,
 # and CI machines comfortably do that in tens of ns.
 OBS_SPAN_NS_CEILING = 100.0
+
+# ISSUE 10: absolute slack under the lazy-decode latency gate — per-token
+# times are ~100ms of tracing + planning Python, and CI scheduler jitter
+# alone can add a large fraction of that.
+LM_TIME_SLACK_MS = 100.0
 
 
 def machine_ref_s() -> float:
@@ -444,6 +550,27 @@ def compare_snapshots(snap: Dict, base: Dict, tolerance: float) -> List[str]:
     if span_ns is not None and span_ns > OBS_SPAN_NS_CEILING:
         fails.append(f"obs: disabled span() costs {span_ns:.0f}ns/call > "
                      f"{OBS_SPAN_NS_CEILING:.0f}ns ceiling")
+    # lm (ISSUE 10): the bitwise contract and the claimant adoption are
+    # absolute; lazy decode latency takes the machine-normalized tolerance
+    lm = snap.get("lm", {})
+    if lm:
+        if not lm.get("bit_identical", True):
+            fails.append("lm: lazy transformer logits not bit-identical "
+                         "to the jitted direct model")
+        bb = lm.get("backend_blocks", {})
+        for name in ("rmsnorm", "flash_attention"):
+            if bb.get(name, 0) < 1:
+                fails.append(f"lm: the {name!r} claimant never claimed a "
+                             f"block (backend_blocks={bb})")
+        b_lm = base.get("lm", {})
+        if b_lm.get("decode_ms_lazy") and lm.get("decode_ms_lazy") is not None:
+            limit = b_lm["decode_ms_lazy"] * ratio * (1.0 + tolerance) \
+                + LM_TIME_SLACK_MS
+            if lm["decode_ms_lazy"] > limit:
+                fails.append(
+                    f"lm: lazy decode {lm['decode_ms_lazy']:.1f}ms/token > "
+                    f"{limit:.1f}ms (base {b_lm['decode_ms_lazy']:.1f}ms, "
+                    f"machine ratio {ratio:.2f})")
     # serving (ISSUE 8): correctness, warm start and the tail ratio are
     # absolute; QPS takes the machine-normalized relative tolerance
     srv = snap.get("serving", {})
@@ -476,7 +603,7 @@ def compare_snapshots(snap: Dict, base: Dict, tolerance: float) -> List[str]:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default="BENCH_9.json",
+    ap.add_argument("--json", default="BENCH_10.json",
                     help="output path for the snapshot JSON")
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer device counts")
@@ -507,6 +634,7 @@ def main() -> None:
         "mixed_lowering": snap_mixed_lowering(),
         "partition_quality": snap_partition_quality(args.quick),
         "loop_fusion": snap_loop_fusion(args.quick),
+        "lm": snap_lm(args.quick),
         "obs": snap_obs(),
         "serving": snap_serving(args.quick),
     }

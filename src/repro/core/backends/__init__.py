@@ -10,7 +10,10 @@ import:
 * ``pallas``    — one tiled Pallas kernel per block (claims what the
   fused-block codegen expresses, DESIGN.md §13);
 * ``shard_map`` — multi-device blocks with real collectives (claims
-  sharded blocks on a mesh, DESIGN.md §12).
+  sharded blocks on a mesh, DESIGN.md §12);
+* ``flash_attention`` / ``rmsnorm`` / ``mamba_scan`` — hand-written-
+  kernel claimants for LM blocks (op-pattern matchers + the row-replay
+  codegen, DESIGN.md §20; the ``backend="lm"`` stack).
 
 New backends (interpreter/debug, multi-GPU pallas, CPU-vectorized)
 implement the protocol and call :func:`register_backend`; any executor
@@ -25,6 +28,8 @@ from .base import (LoweringBackend, LoweringContext,         # noqa: F401
                    LoweringDecision, LoweringPolicy, available_backends,
                    get_backend, register_backend, select_lowering,
                    unregister_backend)
+from .lm import (LM_STACK, FlashAttentionBackend,            # noqa: F401
+                 MambaScanBackend, RMSNormBackend)
 from .pallas import PallasBackend                            # noqa: F401
 from .shard_map import ShardMapBackend                       # noqa: F401
 from .xla import XLABackend                                  # noqa: F401
@@ -32,6 +37,9 @@ from .xla import XLABackend                                  # noqa: F401
 register_backend(XLABackend())
 register_backend(PallasBackend())
 register_backend(ShardMapBackend())
+register_backend(FlashAttentionBackend())
+register_backend(RMSNormBackend())
+register_backend(MambaScanBackend())
 
 
 def default_stack(backend="xla", mesh=None) -> Tuple[str, ...]:
@@ -39,13 +47,17 @@ def default_stack(backend="xla", mesh=None) -> Tuple[str, ...]:
     preference-ordered candidate list of the lowering policy.
 
     Strings keep their historical meaning (``"xla"`` → XLA only,
-    ``"pallas"`` → Pallas with XLA fallback, any other registered name →
-    that backend with XLA fallback); a tuple/list is taken verbatim.  A
-    mesh prepends ``shard_map`` so sharded blocks prefer collectives."""
+    ``"pallas"`` → Pallas with XLA fallback, ``"lm"`` → the hand-written
+    kernel claimants over Pallas over XLA (``lm.LM_STACK``), any other
+    registered name → that backend with XLA fallback); a tuple/list is
+    taken verbatim.  A mesh prepends ``shard_map`` so sharded blocks
+    prefer collectives."""
     if isinstance(backend, (tuple, list)):
         names = tuple(backend)
     elif backend == "xla":
         names = ("xla",)
+    elif backend == "lm":
+        names = LM_STACK
     else:
         names = (backend, "xla")
     if mesh is not None and "shard_map" not in names:

@@ -29,7 +29,7 @@ KERNEL_LAUNCH_S = 2e-6    # per-dispatch overhead (XLA executable launch)
 # fabric bytes).  Persisted profiles (tuning.profile) embed it; bump it
 # whenever pricing features change meaning, and every stale profile on disk
 # is refused instead of silently miscalibrating a fit.
-COST_REGISTRY_VERSION = 6
+COST_REGISTRY_VERSION = 7
 
 
 def gather_table_bytes(b: BlockInfo) -> int:

@@ -144,7 +144,7 @@ ELEMENTWISE = {
     "maximum": 2, "minimum": 2, "sqrt": 1, "exp": 1, "log": 1, "abs": 1,
     "neg": 1, "sin": 1, "cos": 1, "erf": 1, "sign": 1, "rsqrt": 1,
     "greater": 2, "less": 2, "where": 3, "tanh": 1, "square": 1,
-    "reciprocal": 1, "mod": 2, "floor": 1,
+    "reciprocal": 1, "mod": 2, "floor": 1, "sigmoid": 1,
 }
 REDUCTIONS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod"}
 SPECIAL = {"random", "range", "matmul", "gather", "del", "sync", "free"}

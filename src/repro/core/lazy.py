@@ -441,6 +441,19 @@ class LazyArray:
         return LazyArray(self.rt, View(v.base, v.offset, v.shape[::-1],
                                        v.strides[::-1]))
 
+    def transpose(self, *axes) -> "LazyArray":
+        """Permute axes — a pure view (stride shuffle), records nothing."""
+        if len(axes) == 1 and isinstance(axes[0], (tuple, list)):
+            axes = tuple(axes[0])
+        if not axes:
+            return self.T
+        assert sorted(axes) == list(range(self.ndim)), \
+            f"bad permutation {axes!r} for ndim {self.ndim}"
+        v = self.view
+        return LazyArray(self.rt, View(v.base, v.offset,
+                                       tuple(v.shape[a] for a in axes),
+                                       tuple(v.strides[a] for a in axes)))
+
     def reshape(self, *shape) -> "LazyArray":
         if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
             shape = tuple(shape[0])
@@ -681,6 +694,7 @@ square = _unary("square")
 rsqrt = _unary("rsqrt")
 floor = _unary("floor")
 sign = _unary("sign")
+sigmoid = _unary("sigmoid")
 
 
 def maximum(a: LazyArray, b, out: Optional[LazyArray] = None) -> LazyArray:
@@ -708,9 +722,36 @@ def where(cond: LazyArray, a, b) -> LazyArray:
 
 
 def matmul(a: LazyArray, b: LazyArray) -> LazyArray:
-    assert a.ndim == 2 and b.ndim == 2
-    out = _alloc(a.rt, (a.shape[0], b.shape[1]), a.dtype)
+    """Matrix product, batched like ``jnp.matmul``: leading (batch) axes
+    broadcast, the last two contract.  An opaque op — always its own fusion
+    block (``fusion.OPAQUE_OPCODES``) lowered straight to ``jnp.matmul``."""
+    assert a.ndim >= 2 and b.ndim >= 2, (a.shape, b.shape)
+    assert a.shape[-1] == b.shape[-2], (a.shape, b.shape)
+    batch = tuple(np.broadcast_shapes(a.shape[:-2], b.shape[:-2]))
+    out = _alloc(a.rt, batch + (a.shape[-2], b.shape[-1]), a.dtype)
     a.rt.record(Op("matmul", out.view, (a.view, b.view)))
+    return out
+
+
+def concatenate(arrays, axis: int = -1) -> LazyArray:
+    """Concatenate along ``axis`` — lowered to one fresh base plus a window
+    ``copy`` per piece, so the copies fuse with equal-domain producers."""
+    arrays = [a if isinstance(a, LazyArray) else asarray(a) for a in arrays]
+    assert arrays, "need at least one array"
+    a0 = arrays[0]
+    if axis < 0:
+        axis += a0.ndim
+    for a in arrays[1:]:
+        assert a.shape[:axis] + a.shape[axis + 1:] == \
+            a0.shape[:axis] + a0.shape[axis + 1:], (a.shape, a0.shape)
+    total = sum(a.shape[axis] for a in arrays)
+    shape = a0.shape[:axis] + (total,) + a0.shape[axis + 1:]
+    out = _alloc(a0.rt, shape, a0.dtype)
+    off = 0
+    for a in arrays:
+        key = (slice(None),) * axis + (slice(off, off + a.shape[axis]),)
+        out[key] = a
+        off += a.shape[axis]
     return out
 
 

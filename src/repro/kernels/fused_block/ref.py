@@ -18,7 +18,7 @@ _UNARY = {
     "abs": jnp.abs, "neg": jnp.negative, "sin": jnp.sin, "cos": jnp.cos,
     "erf": jax.scipy.special.erf, "sign": jnp.sign, "rsqrt": jax.lax.rsqrt,
     "tanh": jnp.tanh, "square": jnp.square, "reciprocal": lambda x: 1.0 / x,
-    "floor": jnp.floor,
+    "floor": jnp.floor, "sigmoid": jax.nn.sigmoid,
 }
 _BINARY = {
     "add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,

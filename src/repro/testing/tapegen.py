@@ -41,11 +41,17 @@ Checks (each returns normally or raises ``AssertionError``):
   identical to the unfused singleton/XLA reference;
 * ``check_dist``  — a COMM-inserting sharded program on a real device mesh
   (shard_map collectives) is bitwise identical to the same program on a
-  single device (COMM as identity copies).
+  single device (COMM as identity copies);
+* ``check_lm``    — an LM-shaped program (:class:`LMProgram` grammars:
+  rmsnorm / masked-softmax attention / MoE top-k routing / selective
+  scan) run on the ``backend="lm"`` claimant stack is bitwise identical
+  to the plain XLA stack under the SAME greedy partition, and the
+  grammar's hand-written kernel claimant actually claimed a block.
 
 CLI sweep (the CI fuzz job)::
 
     PYTHONPATH=src python -m repro.testing.tapegen --n 200 [--dist]
+    PYTHONPATH=src python -m repro.testing.tapegen --n 40 --checks lm
     PYTHONPATH=src python -m repro.testing.tapegen --only 1337   # repro
 """
 
@@ -368,6 +374,107 @@ class IterativeProgram:
         return outs
 
 
+class LMProgram:
+    """A seeded LM-shaped lazy program (DESIGN.md §20).
+
+    Four grammars, chosen by ``seed % 4``, each tracing the op shapes the
+    LM kernel claimants pattern-match — sized by the seed so the sweep
+    covers many domains:
+
+    * ``rmsnorm``    — residual add, sum-of-squares variance, the
+      ``div→add(eps)→rsqrt→mul→mul`` scale chain (``rmsnorm`` claimant);
+    * ``attention``  — scaled masked scores, ``where(-inf)``, the
+      max / shifted-exp / sum / normalize softmax chain
+      (``flash_attention`` claimant, two claimed reduction blocks);
+    * ``moe``        — top-k expert routing: host-computed argsort
+      indices, ``take`` gathers out of an expert table, gate-weighted
+      combine (gathers stay on the XLA floor — no claimant);
+    * ``scan``       — a selective-scan step ``exp(dtA)*h + gate*u``
+      with a trailing contraction (``mamba_scan`` claimant).
+
+    Leaves are integer-valued float32 (``floor(u * 16) - 8``), so sums of
+    squares and masked maxima are exact; transcendentals (``rsqrt`` /
+    ``exp``) receive identical input bits on every path and the softmax /
+    scan reductions are row-local in both the claimants' row-replay
+    kernels and the XLA block fallback — which is precisely the bitwise
+    contract ``check_lm`` exercises.
+    """
+
+    GRAMMARS = ("rmsnorm", "attention", "moe", "scan")
+
+    def __init__(self, seed: int, *, size: int = 64):
+        self.seed = int(seed)
+        self.grammar = self.GRAMMARS[self.seed % 4]
+        rnd = random.Random(self.seed ^ 0x1A57F00D)
+        self.b = rnd.choice((1, 2))                   # batch
+        self.s = rnd.choice((4, 8, 16))               # sequence
+        self.d = max(8, min(128, int(size)))          # feature
+        self.h = rnd.choice((1, 2, 4))                # heads
+        self.n_exp = rnd.choice((4, 8))               # experts
+
+    def _q16(self, rng, shape) -> np.ndarray:
+        return (np.floor(rng.random(shape, dtype=np.float32) * 16.0)
+                - 8.0).astype(np.float32)
+
+    def _trace(self, rt) -> List[np.ndarray]:
+        from repro.core import lazy as bh
+        rng = np.random.default_rng(self.seed)
+        b, s, d, h = self.b, self.s, self.d, self.h
+        if self.grammar == "rmsnorm":
+            x = rt.adopt(self._q16(rng, (b, s, d)))
+            r = rt.adopt(self._q16(rng, (b, s, d)))
+            g1 = rt.adopt(self._q16(rng, (1, 1, d)) / 16.0 + 1.0)
+            y = x + r
+            var = (y * y).sum(axis=-1)
+            var_b = var.reshape(b, s, 1).broadcast_to((b, s, d))
+            inv = bh.rsqrt(var_b / float(d) + 1e-6)
+            out = y * inv * g1.broadcast_to((b, s, d))
+            return [out.numpy()]
+        if self.grammar == "attention":
+            sc = rt.adopt(self._q16(rng, (b, h, s, s)))
+            mask = rt.adopt(
+                np.tril(np.ones((s, s), bool)).reshape(1, 1, s, s))
+            neg = rt.adopt(np.full((1, 1, 1, 1), -1e30, np.float32))
+            scm = bh.where(mask.broadcast_to(sc.shape), sc * 0.125, neg)
+            m = scm.max(axis=-1)
+            e = bh.exp(scm - m.reshape(b, h, s, 1).broadcast_to(scm.shape))
+            z = e.sum(axis=-1)
+            p = e / z.reshape(b, h, s, 1).broadcast_to(e.shape)
+            return [p.numpy()]
+        if self.grammar == "moe":
+            t, k = b * s, 2
+            logits = self._q16(rng, (t, self.n_exp)) \
+                + rng.random((t, self.n_exp), dtype=np.float32) * 0.5
+            topk = np.argsort(-logits, axis=1)[:, :k]     # host-side top-k
+            picked = np.take_along_axis(logits, topk, axis=1)
+            ex = np.exp(picked - picked.max(1, keepdims=True))
+            gates = (ex / ex.sum(1, keepdims=True)).astype(np.float32)
+            table = rt.adopt(self._q16(rng, (self.n_exp, d)))
+            x = rt.adopt(self._q16(rng, (t, d)))
+            out = None
+            for j in range(k):
+                idx = rt.adopt(topk[:, j].astype(np.int32))
+                gate = rt.adopt(np.ascontiguousarray(gates[:, j:j + 1]))
+                expert = bh.take(table, idx, axis=0)      # (t, d) gather
+                term = x * expert * gate.broadcast_to((t, d))
+                out = term if out is None else out + term
+            return [out.numpy()]
+        # scan: one selective-scan step + contraction
+        dt_a = rt.adopt(-(self._q16(rng, (b, s, d)) / 16.0 + 0.5))
+        hid = rt.adopt(self._q16(rng, (b, s, d)))
+        upd = rt.adopt(self._q16(rng, (b, s, d)))
+        gate = rt.adopt(self._q16(rng, (b, s, d)) / 16.0)
+        h_new = bh.exp(dt_a) * hid + gate * upd
+        y = (h_new * gate).sum(axis=-1)
+        out = h_new + y.reshape(b, s, 1).broadcast_to((b, s, d))
+        return [h_new.numpy(), out.numpy()]
+
+    def run(self, **runtime_kw) -> List[np.ndarray]:
+        from repro.core.lazy import fresh_runtime
+        with fresh_runtime(**runtime_kw) as rt:
+            return self._trace(rt)
+
+
 # ---------------------------------------------------------------------------
 # Differential checks
 # ---------------------------------------------------------------------------
@@ -564,8 +671,39 @@ def check_serve(seed: int, *, tenants: int = 4, requests: int = 2,
         f"seed {seed}: no request ever coalesced (window too small?)"
 
 
+#: grammar -> the hand-written kernel claimant that must claim >= 1 block
+#: (moe is gather-dominated: no claimant, the bitwise check is the point)
+_LM_CLAIMANTS = {"rmsnorm": "rmsnorm", "attention": "flash_attention",
+                 "scan": "mamba_scan"}
+
+
+def check_lm(seed: int, *, size: int = 64) -> None:
+    """LM claimant stack == XLA stack, bitwise, under the SAME partition.
+
+    Both runs use greedy/bohrium — partitioning is backend-independent, so
+    the two stacks lower the *identical* block sequence and the comparison
+    is exactly the claimant protocol's contract: a hand-written kernel may
+    claim a block only if its result is bit-identical to the XLA fallback
+    (DESIGN.md §20).  For the grammars with a matching claimant the check
+    also asserts the claim actually happened — a silently-declining
+    matcher would otherwise turn this into XLA vs XLA."""
+    from repro.core.lazy import fresh_runtime
+    prog = LMProgram(seed, size=size)
+    kw = dict(algorithm="greedy", cost_model="bohrium", loop_fusion=False)
+    ref = prog.run(backend="xla", **kw)
+    with fresh_runtime(backend="lm", **kw) as rt:
+        got = prog._trace(rt)
+        blocks = dict(rt.executor.stats.get("backend_blocks", {}))
+    _assert_bitwise(ref, got, f"seed {seed} [lm/{prog.grammar} vs xla]")
+    claimant = _LM_CLAIMANTS.get(prog.grammar)
+    if claimant is not None:
+        assert blocks.get(claimant, 0) >= 1, (
+            f"seed {seed}: grammar {prog.grammar!r} never exercised the "
+            f"{claimant!r} claimant (backend_blocks={blocks})")
+
+
 CHECKS = {"graph": check_graph, "exec": check_exec, "dist": check_dist,
-          "loop": check_loop, "serve": check_serve}
+          "loop": check_loop, "serve": check_serve, "lm": check_lm}
 
 
 def check_seed(seed: int, checks: Sequence[str] = ("graph", "exec"),
@@ -587,6 +725,8 @@ def check_seed(seed: int, checks: Sequence[str] = ("graph", "exec"),
         elif name == "serve":
             check_serve(seed, n_actions=max(4, kw.get("n_actions", 20) // 3),
                         size=kw.get("size", 64))
+        elif name == "lm":
+            check_lm(seed, size=kw.get("size", 64))
         else:
             raise ValueError(f"unknown check {name!r}; have {sorted(CHECKS)}")
 

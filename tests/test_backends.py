@@ -202,6 +202,75 @@ def test_single_flush_mixes_shard_map_and_xla():
 
 
 # ---------------------------------------------------------------------------
+# LM kernel claimants (ISSUE 10 satellite)
+# ---------------------------------------------------------------------------
+
+def _rmsnorm_scale_tape():
+    """A recorded block both the ``rmsnorm`` claimant and generic Pallas
+    can express: the div→add(eps)→rsqrt→mul scale chain on a 2-D domain."""
+    with fresh_runtime() as rt:
+        x = bh.asarray(np.arange(64.0).reshape(8, 8) + 1.0)
+        y = x * bh.rsqrt(x / 8.0 + 1e-6)
+        rt.record(Op("sync", None, sync_bases=frozenset({y.view.base})))
+        tape = list(rt.tape)
+        rt.tape.clear()
+        y._alive = False
+    return tape
+
+
+def test_lm_stack_resolution():
+    assert default_stack("lm") == ("flash_attention", "rmsnorm",
+                                   "mamba_scan", "pallas", "xla")
+    assert {"flash_attention", "rmsnorm", "mamba_scan"} \
+        <= set(available_backends())
+
+
+def test_claimant_and_pallas_tie_broken_by_stack_order():
+    """A block claimed by BOTH a hand-written kernel claimant and generic
+    Pallas prices identically (one dispatch each); preference order is the
+    deterministic tie-break — flipping the stack flips the winner."""
+    tape = _rmsnorm_scale_tape()
+    plan = next(p for p in _plans(tape) if p.has_work)
+    ops = [tape[i] for i in plan.op_indices]
+    ctx = LoweringContext()
+    d = select_lowering(ops, plan, ("rmsnorm", "pallas", "xla"), ctx)
+    assert d.backend == "rmsnorm"
+    assert d.reason_for("pallas") is None       # pallas claimed, just lost
+    d = select_lowering(ops, plan, ("pallas", "rmsnorm", "xla"), ctx)
+    assert d.backend == "pallas"
+    assert d.reason_for("rmsnorm") is None
+    # non-matching claimants decline with their matcher slug
+    d = select_lowering(ops, plan,
+                        ("flash_attention", "mamba_scan", "xla"), ctx)
+    assert d.backend == "xla"
+    assert d.reason_for("flash_attention") == "no_softmax"
+    assert d.reason_for("mamba_scan") == "no_scan"
+
+
+def test_claimant_builder_failure_degrades_to_xla():
+    """A claimant whose build() raises must not kill the flush: the
+    executor degrades the block to the XLA floor and records the decline
+    as ("name", "error")."""
+
+    class _BoomBackend(_CountingBackend):
+        def build(self, ops, plan, ctx):
+            raise RuntimeError("builder exploded")
+
+    register_backend(_BoomBackend("boom"))
+    try:
+        with fresh_runtime(algorithm="greedy", backend=("boom",)) as rt:
+            x = bh.asarray(np.arange(32.0))
+            got = (x * 3.0 + 1.0).numpy()
+            st = rt.executor.stats
+        np.testing.assert_array_equal(got, np.arange(32.0) * 3.0 + 1.0)
+        assert st["backend_blocks"]["xla"] >= 1
+        assert st["backend_blocks"].get("boom", 0) == 0
+        assert st["backend_fallbacks"]["boom"]["error"] >= 1
+    finally:
+        unregister_backend("boom")
+
+
+# ---------------------------------------------------------------------------
 # scheduler lower stage + merge-cached decisions
 # ---------------------------------------------------------------------------
 

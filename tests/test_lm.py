@@ -1,0 +1,131 @@
+"""LM workloads through the lazy runtime (ISSUE 10, DESIGN.md §20).
+
+The tentpole contract: a tiny-config transformer forward / prefill /
+decode step traced through :class:`repro.models.lazy_transformer
+.LazyTransformer` flushes as one tape per call and produces logits (and KV
+caches) BITWISE identical to the jitted direct model — while the
+``backend="lm"`` stack lowers the rmsnorm and masked-softmax blocks
+through the hand-written kernel claimants (asserted via executor stats and
+the explain report).  The reference is the *jitted* direct call: XLA
+contracts mul+add into FMA under jit, and block-granularity execution
+reproduces those bits exactly (see the ``lazy_transformer`` module doc).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.obs.explain import explain
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.lazy_transformer import LazyTransformer, validate_config
+
+CFG = ModelConfig(name="lm_tiny", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=97,
+                  dtype="float32", param_dtype="float32", norm_plus_one=True,
+                  tie_embeddings=False)
+TOKENS = np.asarray([[3, 14, 15, 92, 65, 35], [8, 9, 79, 3, 2, 38]], np.int32)
+MAX_SEQ = 16
+
+
+@pytest.fixture(scope="module")
+def params():
+    p, _ = T.init_params(CFG, jax.random.PRNGKey(0))
+    return p
+
+
+@pytest.fixture(scope="module")
+def lt(params):
+    return LazyTransformer(params, CFG)
+
+
+def _claims(rt) -> dict:
+    return dict(rt.executor.stats.get("backend_blocks", {}))
+
+
+def test_forward_bitwise_identical_to_jitted_direct(params, lt):
+    ref = jax.jit(lambda p, t: T.forward(p, t, CFG)[0])(params, TOKENS)
+    got = lt.forward(TOKENS)
+    assert got.dtype == np.float32 and got.shape == ref.shape
+    assert np.asarray(ref).tobytes() == got.tobytes()
+
+
+def test_forward_lowers_through_kernel_claimants(lt):
+    lt.forward(TOKENS)
+    claims = _claims(lt.rt)
+    # per forward: one scale block per rmsnorm (2 per layer + final), two
+    # reduction blocks per attention softmax
+    assert claims.get("rmsnorm", 0) >= 2 * CFG.n_layers + 1
+    assert claims.get("flash_attention", 0) >= 2 * CFG.n_layers
+
+
+def test_explain_report_shows_claimant_decisions(lt):
+    lt.forward(TOKENS)
+    rep = explain(lt.rt)
+    assert rep.backends == ("flash_attention", "rmsnorm", "mamba_scan",
+                            "pallas", "xla")
+    winners = {}
+    for blk in rep.blocks:
+        if blk.backend:
+            winners.setdefault(blk.backend, blk)
+    assert "rmsnorm" in winners and "flash_attention" in winners, \
+        sorted(winners)
+    blk = winners["rmsnorm"]
+    assert "rsqrt" in blk.opcodes
+    by_name = {v.backend: v for v in blk.verdicts}
+    assert by_name["rmsnorm"].claimed and by_name["rmsnorm"].winner
+    assert by_name["flash_attention"].reason == "no_softmax"
+    assert by_name["mamba_scan"].reason == "no_scan"
+    soft = winners["flash_attention"]
+    assert "reduce_max" in soft.opcodes or "reduce_sum" in soft.opcodes
+
+
+def test_prefill_and_decode_bitwise_identical_to_jitted_serving(params, lt):
+    ref_logits, ref_caches = jax.jit(
+        lambda p, t: T.serve_prefill(p, t, CFG, MAX_SEQ))(params, TOKENS)
+    got = lt.prefill(TOKENS, MAX_SEQ)
+    assert np.asarray(ref_logits).tobytes() == got.tobytes()
+
+    unit, n_groups = CFG.scan_groups()
+    cache_np = lt.cache_numpy()
+    li = 0
+    for g in range(n_groups):
+        for i in range(len(unit)):
+            gk, gv = cache_np[li]
+            assert np.asarray(ref_caches[f"l{i}"]["k"])[g].tobytes() \
+                == gk.tobytes()
+            assert np.asarray(ref_caches[f"l{i}"]["v"])[g].tobytes() \
+                == gv.tobytes()
+            li += 1
+
+    dec = jax.jit(lambda p, c, t: T.serve_decode(p, c, t, CFG))
+    caches = ref_caches
+    for step in range(3):
+        tok = np.asarray([[5 + step], [11 + step]], np.int32)
+        ref_l, caches = dec(params, caches, tok)
+        got_l = lt.decode(tok)
+        assert np.asarray(ref_l).tobytes() == got_l.tobytes(), \
+            f"decode step {step} diverged"
+    claims = _claims(lt.rt)
+    assert claims.get("rmsnorm", 0) >= 1
+    assert claims.get("flash_attention", 0) >= 1
+
+
+def test_lm_fuzz_grammars_cover_all_claimants():
+    """One seed per LMProgram grammar: claimant stack == XLA stack bitwise,
+    and each grammar's claimant actually claims (moe: gather on the XLA
+    floor, bitwise only)."""
+    from repro.testing.tapegen import LMProgram, check_lm
+    grammars = {LMProgram(seed).grammar for seed in range(4)}
+    assert grammars == {"rmsnorm", "attention", "moe", "scan"}
+    for seed in range(4):
+        check_lm(seed)
+
+
+def test_validate_config_rejects_unsupported():
+    import dataclasses
+    validate_config(CFG)                       # the supported shape passes
+    for kw in ({"dtype": "bfloat16"}, {"n_kv_heads": 1}, {"act": "gelu"},
+               {"tie_embeddings": True}, {"qkv_bias": True}):
+        with pytest.raises(ValueError):
+            validate_config(dataclasses.replace(CFG, **kw))
